@@ -1,0 +1,203 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, using the exact (probe-extrapolated) HLO
+accounting from launch/dryrun.py — all quantities are PER DEVICE (the
+post-SPMD partitioned module):
+
+    compute term    = HLO_FLOPs_dev / peak_FLOPs        (197 TFLOP/s bf16)
+    memory term     = HLO_bytes_dev / HBM_bw            (819 GB/s)
+    collective term = collective_wire_bytes_dev / ICI   (50 GB/s/link)
+
+The dominant term is the bottleneck; roofline fraction = compute_term /
+max(all terms) (the MFU upper bound if compute overlapped perfectly with
+everything else).  MODEL_FLOPS uses the assignment's convention: 6·N·D for
+training (N = active params, D = tokens), 2·N·D for prefill, 2·N·B per
+decode step.  The MODEL/HLO ratio exposes remat and redundant compute.
+
+An analytic per-device memory fit (params/optimizer/cache/residuals) is
+reported alongside XLA's memory_analysis, whose CPU-backend numbers are
+aggregate, not per-device (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12     # TPU v5e bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        total = 6.0 * n * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.seq_len * shape.global_batch
+    else:  # decode: one token per request
+        total = 2.0 * n * shape.global_batch
+    return total / devices
+
+
+def analytic_memory_gb(arch: str, shape_name: str, devices: int,
+                       mesh_kind: str) -> dict:
+    """First-principles per-device HBM budget (bf16 params, f32 adam)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count()
+    # params replicated across pods, sharded across one pod's 256 chips
+    shard = min(devices, 256)
+    out = {}
+    if shape.kind == "train":
+        out["params+opt+grads"] = n * (2 + 4 + 4 + 4) / shard / 1e9
+        # saved residuals: one (B_dev, S/model, D) bf16 per layer (SP on)
+        bdev = shape.global_batch / (devices / 16)  # data(+pod) shards
+        out["residuals"] = (cfg.num_layers * bdev * shape.seq_len / 16
+                            * cfg.d_model * 2) / 1e9
+    else:
+        out["params"] = n * 2 / shard / 1e9
+        if cfg.family == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            state = cfg.num_layers * shape.global_batch * (
+                (d_in // s.head_dim) * s.d_state * s.head_dim * 4)
+            out["state"] = state / devices / 1e9
+        elif cfg.mla is not None:
+            per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+            out["cache"] = (cfg.num_layers * shape.global_batch
+                            * min(shape.seq_len, 1 << 30) * per_tok * 2
+                            / devices / 1e9)
+        else:
+            eff_len = shape.seq_len
+            if cfg.window:
+                eff_len = min(eff_len, cfg.window)
+            if cfg.family == "hybrid":
+                eff_len = min(eff_len, cfg.hybrid.local_window)
+            out["cache"] = (cfg.num_layers * shape.global_batch * eff_len
+                            * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+                            / devices / 1e9)
+    out["total"] = sum(out.values())
+    return out
+
+
+SUGGESTIONS = {
+    "compute": ("MXU-bound: raise arithmetic efficiency — larger per-device "
+                "batch/microbatching, drop remat recompute (policy=dots), "
+                "or quantize the FFN path."),
+    "memory": ("HBM-bound: fuse attention (Pallas flash kernel keeps scores "
+               "in VMEM), widen per-step tiles, or shrink decode batch "
+               "padding; for decode, page the KV pool so only live pages "
+               "stream."),
+    "collective": ("ICI-bound: reduce per-layer all-gathers (FSDP prefetch/"
+                   "persistent gathered weights), quantize gradients (int8 "
+                   "error-feedback), or reshard so contractions psum less "
+                   "often."),
+}
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    c = rec["cost"]
+    devices = rec["devices"]
+    terms = {
+        "compute": c["flops"] / PEAK_FLOPS,
+        "memory": c["bytes_accessed"] / HBM_BW,
+        "collective": c["coll_total_bytes"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    tmax = max(terms.values())
+    mf = model_flops_per_device(rec["arch"], rec["shape"], devices)
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": terms["compute"],
+        "memory_s": terms["memory"],
+        "collective_s": terms["collective"],
+        "dominant": dominant,
+        "roofline_fraction": terms["compute"] / tmax if tmax else 0.0,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": c["flops"],
+        "model_over_hlo": mf / c["flops"] if c["flops"] else 0.0,
+        "analytic_mem_gb": analytic_memory_gb(
+            rec["arch"], rec["shape"], devices, rec["mesh"])["total"],
+        "fits_16gb": analytic_memory_gb(
+            rec["arch"], rec["shape"], devices, rec["mesh"])["total"] < 16.0,
+        "suggestion": SUGGESTIONS[dominant],
+    }
+
+
+def load_all(results_dir: str = RESULTS_DIR, mesh: str | None = None,
+             tag_filter: str = "") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(f))
+        parts = rec["cell"].split("__")
+        has_tag = len(parts) > 3
+        if tag_filter == "" and has_tag:
+            continue
+        if tag_filter and (not has_tag or parts[3] != tag_filter):
+            continue
+        if mesh and rec.get("mesh") != mesh and parts[2] != mesh:
+            continue
+        a = analyze_cell(rec)
+        if a:
+            a["skipped"] = False
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append({"cell": rec["cell"], "skipped": True,
+                        "reason": rec["reason"]})
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| cell | compute s | memory s | collective s | dominant | "
+           "roofline frac | model/HLO | mem GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in rows:
+        if r.get("skipped"):
+            body.append(f"| {r['cell']} | — | — | — | SKIPPED | — | — | — |")
+            continue
+        body.append(
+            f"| {r['cell']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['roofline_fraction']:.2f} | {r['model_over_hlo']:.2f} | "
+            f"{r['analytic_mem_gb']:.1f} |")
+    return hdr + "\n".join(body) + "\n"
+
+
+def bench_rows() -> list[tuple]:
+    """Summary rows for benchmarks/run.py."""
+    rows = []
+    singles = [r for r in load_all(mesh="single") if not r.get("skipped")]
+    if not singles:
+        return [("roofline/cells_analyzed", 0, "run launch/dryrun first")]
+    rows.append(("roofline/cells_analyzed", len(singles), "single-pod"))
+    worst = min(singles, key=lambda r: r["roofline_fraction"])
+    coll = max(singles, key=lambda r: r["collective_s"])
+    rows.append(("roofline/worst_fraction_cell", worst["cell"],
+                 f"frac={worst['roofline_fraction']:.2f}"))
+    rows.append(("roofline/most_collective_bound", coll["cell"],
+                 f"coll_s={coll['collective_s']:.3e}"))
+    for r in singles:
+        rows.append((f"roofline/{r['cell']}/fraction",
+                     round(r["roofline_fraction"], 3),
+                     f"dom={r['dominant']},model/hlo="
+                     f"{r['model_over_hlo']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = load_all(mesh=mesh)
+    print(markdown_table(rows))

@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper table/figure + the beyond-paper
+serving/parking benchmark + the roofline summary.  Prints
+``name,value,derived`` CSV (deliverable d)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t_start = time.time()
+    from benchmarks.figures import ALL_FIGURES
+    from benchmarks.bench_parking import core_throughput_rows, parking_rows
+    from benchmarks import roofline
+
+    rows = []
+    for fig in ALL_FIGURES:
+        t0 = time.time()
+        out = fig(); dt = time.time() - t0
+        rows.extend(out)
+        print(f"# {fig.__name__} ({dt:.1f}s)", file=sys.stderr)
+    rows.extend(parking_rows())
+    rows.extend(core_throughput_rows())
+    rows.extend(roofline.bench_rows())
+
+    print("name,value,derived")
+    for name, value, derived in rows:
+        d = str(derived).replace(",", ";")
+        print(f"{name},{value},{d}")
+    print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

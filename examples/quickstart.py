@@ -1,0 +1,53 @@
+"""Quickstart: park payloads on the 'switch', run a shallow NF chain on
+headers only, merge, and verify wire-level functional equivalence.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.park import ParkConfig, init_state, split, merge, stats
+from repro.core.packet import wire_bytes
+from repro.nf.chain import Chain
+from repro.nf.firewall import Firewall
+from repro.nf.nat import Nat
+from repro.switchsim.simulate import baseline_roundtrip
+from repro.traffic.generator import enterprise
+
+
+def main():
+    wl = enterprise()
+    pkts = wl.make_batch(jax.random.key(0), 256, pmax=2048)
+    print(f"workload: {wl.name}, mean packet {wl.mean_pkt_bytes:.0f}B")
+
+    cfg = ParkConfig(capacity=512, max_exp=2)
+    state = init_state(cfg)
+
+    # Split: park payloads, forward headers (+ un-parked tails)
+    state, to_server = split(cfg, state, pkts)
+    in_bytes = int(jnp.sum(pkts.pkt_len()))
+    srv_bytes = int(jnp.sum(to_server.pkt_len()))
+    print(f"switch->server bytes: {srv_bytes} vs {in_bytes} "
+          f"({100 * (1 - srv_bytes / in_bytes):.1f}% parked)")
+
+    # Shallow NFs see only headers
+    chain = Chain((Firewall(rules=(int(pkts.src_ip[3]),)), Nat()))
+    cstate = chain.init_state()
+    cstate, from_server, dropped, cycles = chain.run(cstate, to_server)
+    print(f"chain dropped {int(dropped.sum())} packets, "
+          f"{cycles:.0f} cycles/pkt")
+
+    # Merge: re-attach parked payloads
+    state, out = merge(cfg, state, from_server)
+    print("switch counters:", stats(state))
+
+    # Functional equivalence vs running the chain on whole packets
+    ref, _, _ = baseline_roundtrip(chain, pkts)
+    got, _ = wire_bytes(out)
+    want, _ = wire_bytes(ref)
+    assert bool(jnp.all(got == want)), "wire mismatch!"
+    print("wire-level functional equivalence: OK (paper §6.2.6)")
+
+
+if __name__ == "__main__":
+    main()

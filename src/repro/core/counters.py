@@ -1,0 +1,39 @@
+"""The paper's eight PayloadPark monitoring counters (§5).
+
+"We maintain eight counters for monitoring PayloadPark operation": splits,
+merges, explicit drops, disabled returns (ENB=0 packets back from the NF
+server), total evictions, premature evictions, small-payload Split skips, and
+occupied-slot Split skips.  We add a ninth (CRC failures on Merge-side header
+validation, §3.2) which the paper mentions but does not enumerate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NAMES = (
+    "splits",              # Split operations with ENB=1 (stage 2, §5)
+    "merges",              # successful Merges
+    "explicit_drops",      # OP=drop packets that freed a slot (§6.2.4)
+    "disabled_returns",    # packets back from NF server with ENB=0 (stage 1)
+    "evictions",           # total payload evictions (expiry reached 0)
+    "premature_evictions", # Merge found generation mismatch -> packet dropped
+    "skip_small_payload",  # Split disabled: payload < park size (§5)
+    "skip_occupied",       # Split disabled: next metadata slot occupied
+    "crc_failures",        # Merge-side tag CRC validation failures
+)
+IDX = {n: i for i, n in enumerate(NAMES)}
+NUM = len(NAMES)
+
+
+def zeros():
+    return jnp.zeros((NUM,), jnp.int32)
+
+
+def bump(counters, name: str, amount):
+    """counters.at[name] += amount (amount may be a traced scalar)."""
+    return counters.at[IDX[name]].add(jnp.asarray(amount, jnp.int32))
+
+
+def as_dict(counters) -> dict[str, int]:
+    vals = [int(v) for v in counters]
+    return dict(zip(NAMES, vals))

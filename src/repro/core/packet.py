@@ -1,0 +1,192 @@
+"""Struct-of-arrays packet batches.
+
+Packets are modelled the way the paper's dataplane sees them: a fixed 42-byte
+Ethernet+IPv4+UDP header (paper footnote 1) whose fields the shallow NFs may
+read/modify, an opaque payload byte array, and the optional 7-byte PayloadPark
+header (paper Fig. 2).  A batch of B packets is a struct-of-arrays so every NF
+and every PayloadPark operation is expressible as vectorized JAX ops.
+
+The payload buffer is fixed-capacity (``PMAX``); ``payload_len`` gives the live
+prefix.  ``wire_bytes`` serializes a packet batch to byte arrays so tests can
+assert *wire-level* functional equivalence (paper §6.2.6 compares PCAPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+ETH_HDR_BYTES = 14
+IPV4_HDR_BYTES = 20
+UDP_HDR_BYTES = 8
+HDR_BYTES = ETH_HDR_BYTES + IPV4_HDR_BYTES + UDP_HDR_BYTES  # 42, paper §1
+PP_HDR_BYTES = 7  # paper Fig. 2 / §7 "fixed PayloadPark header overhead (of 7 bytes)"
+
+# PayloadPark opcodes (paper Fig. 2: OP bit distinguishes Merge / Explicit Drop).
+OP_MERGE = 0
+OP_DROP = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketBatch:
+    """A batch of UDP packets (struct of arrays).
+
+    All integer header fields are int32 (JAX-friendly); MACs are int64 (48-bit
+    values fit).  ``payload`` is (B, PMAX) uint8.  ``alive`` marks packets not
+    dropped by an NF or by the switch.
+    """
+
+    dst_mac: jax.Array   # (B,) int32 (48-bit MACs truncated; simulation only)
+    src_mac: jax.Array   # (B,) int32
+    src_ip: jax.Array    # (B,) int32 (uint32 bit pattern)
+    dst_ip: jax.Array    # (B,) int32
+    proto: jax.Array     # (B,) int32 (17 = UDP)
+    src_port: jax.Array  # (B,) int32
+    dst_port: jax.Array  # (B,) int32
+    payload_len: jax.Array  # (B,) int32, live bytes in ``payload``
+    payload: jax.Array   # (B, PMAX) uint8
+    alive: jax.Array     # (B,) bool
+
+    # PayloadPark header (paper Fig. 2).  Valid only when ``pp_valid``.
+    pp_valid: jax.Array  # (B,) bool   — header present on the wire
+    pp_enb: jax.Array    # (B,) int32  — ENB bit
+    pp_op: jax.Array     # (B,) int32  — OP bit (OP_MERGE / OP_DROP)
+    pp_ti: jax.Array     # (B,) int32  — TAG.table_index
+    pp_clk: jax.Array    # (B,) int32  — TAG.generation (clock)
+    pp_crc: jax.Array    # (B,) int32  — TAG.CRC-16 over (ti, clk)
+
+    @property
+    def batch_size(self) -> int:
+        return self.src_ip.shape[0]
+
+    @property
+    def pmax(self) -> int:
+        return self.payload.shape[1]
+
+    def pkt_len(self) -> jax.Array:
+        """Total on-wire length: 42B header + optional PP header + payload."""
+        pp = jnp.where(self.pp_valid, PP_HDR_BYTES, 0)
+        return HDR_BYTES + pp + self.payload_len
+
+    def replace(self, **kw) -> "PacketBatch":
+        return dataclasses.replace(self, **kw)
+
+
+def make_udp_batch(
+    key: jax.Array,
+    batch: int,
+    pkt_len,
+    pmax: int = 2048,
+    src_ip=None,
+    dst_ip=None,
+    src_port=None,
+    dst_port=None,
+) -> PacketBatch:
+    """Build a batch of UDP packets with pseudorandom payload bytes.
+
+    ``pkt_len`` may be a scalar or a (B,) array of total packet lengths
+    (including the 42-byte header), mirroring the traffic generator's
+    fixed-size and bimodal workloads (paper §6.1).
+    """
+    ks = jax.random.split(key, 6)
+    pkt_len = jnp.broadcast_to(jnp.asarray(pkt_len, jnp.int32), (batch,))
+    payload_len = jnp.maximum(pkt_len - HDR_BYTES, 0)
+    payload = jax.random.randint(ks[0], (batch, pmax), 0, 256, dtype=jnp.int32)
+    # Zero bytes beyond the live prefix so wire serialization is canonical.
+    mask = jnp.arange(pmax)[None, :] < payload_len[:, None]
+    payload = jnp.where(mask, payload, 0).astype(jnp.uint8)
+
+    def _field(k, lo, hi, override):
+        if override is not None:
+            return jnp.broadcast_to(jnp.asarray(override, jnp.int32), (batch,))
+        return jax.random.randint(k, (batch,), lo, hi, dtype=jnp.int32)
+
+    z = jnp.zeros((batch,), jnp.int32)
+    return PacketBatch(
+        dst_mac=jax.random.randint(ks[1], (batch,), 0, (1 << 31) - 1, dtype=jnp.int32),
+        src_mac=jax.random.randint(ks[2], (batch,), 0, (1 << 31) - 1, dtype=jnp.int32),
+        src_ip=_field(ks[3], 0, (1 << 31) - 1, src_ip),
+        dst_ip=_field(ks[4], 0, (1 << 31) - 1, dst_ip),
+        proto=jnp.full((batch,), 17, jnp.int32),
+        src_port=_field(ks[5], 1024, 65536, src_port),
+        dst_port=_field(ks[5], 1024, 65536, dst_port),
+        payload_len=payload_len,
+        payload=payload,
+        alive=jnp.ones((batch,), bool),
+        pp_valid=jnp.zeros((batch,), bool),
+        pp_enb=z,
+        pp_op=z,
+        pp_ti=z,
+        pp_clk=z,
+        pp_crc=z,
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def wire_bytes(p: PacketBatch) -> tuple[jax.Array, jax.Array]:
+    """Serialize each packet to its on-wire byte string (B, 42+7+PMAX) uint8.
+
+    Returns (bytes, lengths).  The PayloadPark header region is included only
+    when ``pp_valid``; dead packets serialize to zeros with length 0.  Used by
+    the functional-equivalence tests (paper §6.2.6).
+    """
+    b, pmax = p.payload.shape
+    width = HDR_BYTES + PP_HDR_BYTES + pmax
+
+    def bytes_of(v, n):
+        v = v.astype(jnp.int32)
+        return jnp.stack(
+            [((v >> (8 * i)) & 0xFF).astype(jnp.uint8) if i < 4
+             else jnp.zeros_like(v, jnp.uint8) for i in range(n)], axis=-1
+        )
+
+    hdr = jnp.concatenate(
+        [
+            bytes_of(p.dst_mac, 6),
+            bytes_of(p.src_mac, 6),
+            bytes_of(jnp.full_like(p.proto, 0x0800), 2),  # ethertype
+            bytes_of(p.proto, 1),
+            bytes_of(p.src_ip, 4),
+            bytes_of(p.dst_ip, 4),
+            bytes_of(jnp.zeros_like(p.proto), 11),  # ver/ihl/tos/id/ttl/cksum pad
+            bytes_of(p.src_port, 2),
+            bytes_of(p.dst_port, 2),
+            bytes_of(p.payload_len + UDP_HDR_BYTES, 2),
+            bytes_of(jnp.zeros_like(p.proto), 2),  # udp cksum
+        ],
+        axis=-1,
+    )
+    assert hdr.shape[-1] == HDR_BYTES, hdr.shape
+
+    pp = jnp.concatenate(
+        [
+            bytes_of(p.pp_enb | (p.pp_op << 1), 1),
+            bytes_of(p.pp_ti, 2),
+            bytes_of(p.pp_clk, 2),
+            bytes_of(p.pp_crc, 2),
+        ],
+        axis=-1,
+    )
+    pp = jnp.where(p.pp_valid[:, None], pp, 0)
+
+    out = jnp.zeros((b, width), jnp.uint8)
+    out = out.at[:, :HDR_BYTES].set(hdr)
+    # Payload begins right after the (optional) PP header.  Build via gather:
+    # out[i, HDR + pp_len + j] = payload[i, j]
+    pp_len = jnp.where(p.pp_valid, PP_HDR_BYTES, 0)
+    col = jnp.arange(width)[None, :]
+    src_idx = col - HDR_BYTES - pp_len[:, None]
+    in_pp = (col >= HDR_BYTES) & (src_idx < 0)
+    pp_idx = jnp.clip(col - HDR_BYTES, 0, PP_HDR_BYTES - 1)
+    payload_region = (src_idx >= 0) & (src_idx < p.payload_len[:, None])
+    gathered = jnp.take_along_axis(
+        p.payload, jnp.clip(src_idx, 0, pmax - 1), axis=1
+    )
+    out = jnp.where(in_pp, jnp.take_along_axis(pp, pp_idx, axis=1), out)
+    out = jnp.where(payload_region, gathered, out)
+    out = jnp.where(p.alive[:, None], out, 0)
+    length = jnp.where(p.alive, p.pkt_len(), 0)
+    return out, length

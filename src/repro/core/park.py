@@ -1,0 +1,307 @@
+"""PayloadPark lookup table: Split / Merge / Evict / Explicit-Drop.
+
+Faithful implementation of the paper's Algorithms 1 and 2 on a JAX state
+machine.  P4 guarantees *atomic, per-packet sequential* register semantics
+("Thanks to the atomic nature of action execution in P4, subsequent packets in
+the match-action pipeline are guaranteed to get different indexes", §5); we
+reproduce that with a ``lax.scan`` over packets in arrival (FIFO) order for
+the control plane (tagger + metadata table), while the bulk payload movement
+(the paper's stage 3..N striping across MAT-local register arrays, Fig. 4) is
+a vectorized scatter/gather that can be routed through the Pallas TPU kernels
+in ``repro.kernels`` (``use_kernel=True``).
+
+Design mapping (see DESIGN.md §2):
+  P4 MAT columns holding payload blocks  ->  lane-striped rows of ``ptable``
+  one stateful register access per MAT   ->  one dynamic-slice store per row
+  per-port pipes                         ->  one ParkState per ingress shard
+  recirculation through a second pipe    ->  ``recirculation=True`` widens the
+                                             row from 160 B to 352 B (§6.2.5)
+
+Deviations from the paper, recorded per DESIGN.md:
+  * the generation clock skips 0 so that ``meta_clk == 0`` unambiguously means
+    "free"; the paper's Alg. 2 compares clocks only, which is identical given
+    tags never carry clk=0.
+  * parked length is ``min(payload_len, park_bytes)`` recorded in a per-slot
+    ``meta_len`` word.  The baseline configuration (park_bytes=160, eligibility
+    payload>=160) makes this exactly the paper's fixed 160-byte parking; the
+    generalization implements the paper's §7 "decoupling boundary" discussion
+    and is exercised by the recirculation mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counters as C
+from repro.core.header import crc16_tag, tag_valid
+from repro.core.packet import OP_DROP, OP_MERGE, PacketBatch
+
+BLOCK_BYTES = 16  # single MAT-cell width (paper Fig. 4: payload blocks P0..PL)
+PARK_BYTES_BASE = 160  # paper §1: "store 160 bytes from each packet's payload"
+PARK_BYTES_RECIRC = 352  # paper §6.2.5: recirculation raises 160 -> 352
+
+
+@dataclasses.dataclass(frozen=True)
+class ParkConfig:
+    capacity: int = 4096          # M, lookup table entries
+    max_exp: int = 1              # Expiry threshold (paper EXP; §6.2.4 sweeps 1/2/10)
+    max_clk: int = 1 << 16        # clock rollover (2-byte register, §5)
+    min_park_len: int = PARK_BYTES_BASE  # eligibility threshold (§5, §6.3.3)
+    recirculation: bool = False   # §6.2.5: stripe across a second pipe
+    pmax: int = 2048              # payload buffer capacity of PacketBatch
+
+    @property
+    def park_bytes(self) -> int:
+        return PARK_BYTES_RECIRC if self.recirculation else PARK_BYTES_BASE
+
+    @property
+    def banks(self) -> int:
+        return self.park_bytes // BLOCK_BYTES
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ParkState:
+    """Registers + tables of one PayloadPark pipe (paper Fig. 4)."""
+
+    tbl_idx: jax.Array   # () int32 — TI register
+    clk: jax.Array       # () int32 — CLK register
+    meta_exp: jax.Array  # (M,) int32 — Expiry threshold per slot
+    meta_clk: jax.Array  # (M,) int32 — generation per slot (0 = free)
+    meta_len: jax.Array  # (M,) int32 — parked byte count per slot
+    ptable: jax.Array    # (M, park_bytes) uint8 — lane-striped payload banks
+    counters: jax.Array  # (C.NUM,) int64
+
+
+def init_state(cfg: ParkConfig) -> ParkState:
+    m = cfg.capacity
+    return ParkState(
+        tbl_idx=jnp.zeros((), jnp.int32),
+        clk=jnp.zeros((), jnp.int32),
+        meta_exp=jnp.zeros((m,), jnp.int32),
+        meta_clk=jnp.zeros((m,), jnp.int32),
+        meta_len=jnp.zeros((m,), jnp.int32),
+        ptable=jnp.zeros((m, cfg.park_bytes), jnp.uint8),
+        counters=C.zeros(),
+    )
+
+
+def occupancy(state: ParkState) -> jax.Array:
+    """Number of live (parked) slots."""
+    return jnp.sum(state.meta_exp > 0)
+
+
+# --------------------------------------------------------------------------
+# Split (paper Algorithm 1)
+# --------------------------------------------------------------------------
+
+def _split_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
+    """Sequential tagger + metadata-table pass.  Returns per-packet decisions."""
+    m = cfg.capacity
+
+    def step(carry, x):
+        ti, clk, meta_exp, meta_clk, meta_len = carry
+        alive, plen = x
+        eligible = alive & (plen >= cfg.min_park_len)
+
+        # -- stage 1: packet tagger (Alg. 1 lines 4-7) ----------------------
+        ti_n = jnp.where(eligible, (ti + 1) % m, ti)
+        clk_n = jnp.where(eligible, clk + 1, clk)
+        # generation clock skips 0 (see module docstring)
+        clk_n = jnp.where(clk_n >= cfg.max_clk, 1, clk_n)
+
+        # -- stage 2: metadata probe (Alg. 1 lines 10-25) -------------------
+        exp_pre = meta_exp[ti_n]
+        exp_dec = jnp.where(exp_pre >= 1, exp_pre - 1, exp_pre)  # lines 11-13
+        evicted = eligible & (exp_pre >= 1) & (exp_dec == 0)
+        available = exp_dec == 0                                  # line 14
+        claim = eligible & available
+
+        new_exp = jnp.where(claim, cfg.max_exp, exp_dec)
+        meta_exp = jnp.where(eligible, meta_exp.at[ti_n].set(new_exp), meta_exp)
+        meta_clk = jnp.where(
+            claim, meta_clk.at[ti_n].set(clk_n),
+            jnp.where(evicted, meta_clk.at[ti_n].set(0), meta_clk),
+        )
+        park_len = jnp.minimum(plen, cfg.park_bytes)
+        meta_len = jnp.where(claim, meta_len.at[ti_n].set(park_len), meta_len)
+
+        out = dict(
+            enb=claim, ti=ti_n, clk=clk_n, evicted=evicted,
+            skip_occupied=eligible & ~available,
+            skip_small=alive & (plen < cfg.min_park_len),
+            park_len=jnp.where(claim, park_len, 0),
+        )
+        return (ti_n, clk_n, meta_exp, meta_clk, meta_len), out
+
+    carry0 = (state.tbl_idx, state.clk, state.meta_exp, state.meta_clk,
+              state.meta_len)
+    (ti, clk, meta_exp, meta_clk, meta_len), outs = jax.lax.scan(
+        step, carry0, (pkts.alive, pkts.payload_len)
+    )
+    return (ti, clk, meta_exp, meta_clk, meta_len), outs
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def split(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+          use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+    """Split operation: park payload prefixes, emit header-only packets.
+
+    Returns (new_state, packets-as-sent-to-the-NF-server).  Every alive packet
+    leaves with a PayloadPark header (ENB=1 if parked, else 0 — §6.1).
+    """
+    (ti, clk, meta_exp, meta_clk, meta_len), d = _split_control(cfg, state, pkts)
+
+    # -- stage 3..N: stripe payload blocks into the payload table -----------
+    park = pkts.payload[:, : cfg.park_bytes]
+    lane = jnp.arange(cfg.park_bytes)[None, :]
+    park = jnp.where(lane < d["park_len"][:, None], park, 0)
+    if use_kernel:
+        from repro.kernels.payload_store import ops as store_ops
+        ptable = store_ops.payload_store(state.ptable, park, d["ti"], d["enb"])
+    else:
+        rows = jnp.where(d["enb"], d["ti"], cfg.capacity)  # OOB rows dropped
+        ptable = state.ptable.at[rows].set(park, mode="drop")
+
+    counters = state.counters
+    counters = C.bump(counters, "splits", jnp.sum(d["enb"]))
+    counters = C.bump(counters, "evictions", jnp.sum(d["evicted"]))
+    counters = C.bump(counters, "skip_occupied", jnp.sum(d["skip_occupied"]))
+    counters = C.bump(counters, "skip_small_payload", jnp.sum(d["skip_small"]))
+
+    new_state = ParkState(ti, clk, meta_exp, meta_clk, meta_len, ptable, counters)
+
+    # -- packet transformation: drop the parked prefix, add the PP header ---
+    shift = d["park_len"]
+    idx = jnp.arange(cfg.pmax)[None, :] + shift[:, None]
+    remainder = jnp.take_along_axis(
+        pkts.payload, jnp.clip(idx, 0, cfg.pmax - 1), axis=1
+    )
+    new_len = pkts.payload_len - shift
+    keep = jnp.arange(cfg.pmax)[None, :] < new_len[:, None]
+    remainder = jnp.where(keep, remainder, 0)
+
+    enb32 = d["enb"].astype(jnp.int32)
+    out = pkts.replace(
+        payload=jnp.where(pkts.alive[:, None], remainder, pkts.payload),
+        payload_len=jnp.where(pkts.alive, new_len, pkts.payload_len),
+        pp_valid=pkts.alive,
+        pp_enb=jnp.where(pkts.alive, enb32, 0),
+        pp_op=jnp.zeros_like(pkts.pp_op),
+        pp_ti=jnp.where(d["enb"], d["ti"], 0),
+        pp_clk=jnp.where(d["enb"], d["clk"], 0),
+        pp_crc=jnp.where(d["enb"], crc16_tag(d["ti"], d["clk"]), 0),
+    )
+    return new_state, out
+
+
+# --------------------------------------------------------------------------
+# Merge + Explicit Drop (paper Algorithm 2, §6.2.4)
+# --------------------------------------------------------------------------
+
+def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
+    """Sequential metadata validation/free pass (Alg. 2 stages 1-2)."""
+
+    def step(carry, x):
+        meta_exp, meta_clk, meta_len = carry
+        alive, valid, enb, op, ti, clk, crc = x
+        is_pp = alive & valid & (enb == 1)
+        crc_ok = tag_valid(ti, clk, crc)
+        checked = is_pp & crc_ok
+        gen_ok = meta_clk[ti] == clk
+        matched = checked & gen_ok                       # Alg. 2 line 11
+        # free the slot (Alg. 2 line 13)
+        meta_exp = jnp.where(matched, meta_exp.at[ti].set(0), meta_exp)
+        meta_clk = jnp.where(matched, meta_clk.at[ti].set(0), meta_clk)
+        plen = jnp.where(matched, meta_len[ti], 0)
+        meta_len = jnp.where(matched, meta_len.at[ti].set(0), meta_len)
+        out = dict(
+            matched=matched,
+            premature=checked & ~gen_ok,
+            crc_fail=is_pp & ~crc_ok,
+            disabled=alive & valid & (enb == 0),
+            is_drop_op=matched & (op == OP_DROP),
+            park_len=plen,
+        )
+        return (meta_exp, meta_clk, meta_len), out
+
+    xs = (pkts.alive, pkts.pp_valid, pkts.pp_enb, pkts.pp_op,
+          pkts.pp_ti, pkts.pp_clk, pkts.pp_crc)
+    carry0 = (state.meta_exp, state.meta_clk, state.meta_len)
+    (meta_exp, meta_clk, meta_len), outs = jax.lax.scan(step, carry0, xs)
+    return (meta_exp, meta_clk, meta_len), outs
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def merge(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+          use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+    """Merge (and Explicit Drop) for packets returning from the NF server.
+
+    Outcomes per packet:
+      * ENB=0: PayloadPark header removed, packet forwarded (Alg. 2 stage 1).
+      * ENB=1, OP=merge, tag valid: payload re-attached, slot freed.
+      * ENB=1, OP=drop, tag valid: slot freed, packet consumed (§6.2.4).
+      * CRC or generation mismatch: packet dropped, counted.
+    """
+    (meta_exp, meta_clk, meta_len), d = _merge_control(cfg, state, pkts)
+
+    # -- stage 3..N: gather payload blocks, then clear the rows --------------
+    fetch = d["matched"] & ~d["is_drop_op"]
+    if use_kernel:
+        from repro.kernels.payload_fetch import ops as fetch_ops
+        parked, ptable = fetch_ops.payload_fetch(
+            state.ptable, pkts.pp_ti, d["matched"])
+    else:
+        parked = state.ptable[pkts.pp_ti]  # (B, park_bytes)
+        parked = jnp.where(d["matched"][:, None], parked, 0)
+        rows = jnp.where(d["matched"], pkts.pp_ti, cfg.capacity)
+        ptable = state.ptable.at[rows].set(
+            jnp.zeros_like(parked), mode="drop")
+
+    counters = state.counters
+    counters = C.bump(counters, "merges", jnp.sum(fetch))
+    counters = C.bump(counters, "explicit_drops", jnp.sum(d["is_drop_op"]))
+    counters = C.bump(counters, "disabled_returns", jnp.sum(d["disabled"]))
+    counters = C.bump(counters, "premature_evictions", jnp.sum(d["premature"]))
+    counters = C.bump(counters, "crc_failures", jnp.sum(d["crc_fail"]))
+
+    new_state = ParkState(state.tbl_idx, state.clk, meta_exp, meta_clk,
+                          meta_len, ptable, counters)
+
+    # -- packet transformation: payload := parked ++ carried remainder ------
+    shift = jnp.where(fetch, d["park_len"], 0)
+    col = jnp.arange(cfg.pmax)[None, :]
+    rem_idx = col - shift[:, None]
+    carried = jnp.take_along_axis(
+        pkts.payload, jnp.clip(rem_idx, 0, cfg.pmax - 1), axis=1)
+    pad = jnp.zeros((pkts.batch_size, cfg.pmax - cfg.park_bytes), jnp.uint8)
+    parked_full = jnp.concatenate([parked, pad], axis=1)
+    new_payload = jnp.where(col < shift[:, None], parked_full, carried)
+    new_len = pkts.payload_len + shift
+    keep = col < new_len[:, None]
+    new_payload = jnp.where(keep, new_payload, 0)
+
+    forwarded = d["disabled"] | fetch
+    dropped = d["premature"] | d["crc_fail"] | d["is_drop_op"]
+    out = pkts.replace(
+        payload=jnp.where(forwarded[:, None], new_payload, pkts.payload),
+        payload_len=jnp.where(forwarded, new_len, pkts.payload_len),
+        alive=pkts.alive & ~dropped,
+        pp_valid=pkts.pp_valid & ~forwarded & ~dropped,
+        pp_enb=jnp.where(forwarded | dropped, 0, pkts.pp_enb),
+        pp_op=jnp.where(forwarded | dropped, 0, pkts.pp_op),
+        pp_ti=jnp.where(forwarded | dropped, 0, pkts.pp_ti),
+        pp_clk=jnp.where(forwarded | dropped, 0, pkts.pp_clk),
+        pp_crc=jnp.where(forwarded | dropped, 0, pkts.pp_crc),
+    )
+    return new_state, out
+
+
+def stats(state: ParkState) -> dict[str, Any]:
+    d = C.as_dict(state.counters)
+    d["occupancy"] = int(occupancy(state))
+    return d

@@ -1,0 +1,319 @@
+"""Logical-axis sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Megatron-style 2-D (+pod) layout on mesh axes ("pod", "data", "model"):
+  * batch over ("pod", "data") — pod folds into data parallelism;
+  * attention heads / FFN hidden / vocab over "model" (tensor parallel);
+  * GQA kv-head projections shard over "model" only when kv_heads divides the
+    axis; otherwise they replicate and the *decode KV cache* shards over the
+    sequence axis instead (context parallelism) — the distributed-decode
+    softmax combine lowers to all-reduces;
+  * MoE experts shard over "model" when num_experts divides it (EP —
+    deepseek's 160/16), else expert-internal d_ff shards (TP — mixtral's 8);
+  * SSD heads and RG-LRU channels shard over "model" (head-parallel scan).
+
+Rules are name+shape based over the flattened param paths; anything
+unmatched replicates.  ``guarded(axis, dim)`` falls back to replication when
+the dimension does not divide the axis size — so every rule is safe for the
+reduced CPU smoke configs as well as the full 512-chip mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+class Rules:
+    """Resolve PartitionSpecs for one (cfg, mesh) pair.
+
+    ``fsdp=True`` additionally shards every >=2-D weight's first free
+    divisible dim over "data" (ZeRO-3 within a pod; pods hold replicas and
+    all-reduce grads over DCN).  With scan-over-layers the per-layer
+    all-gather happens inside the loop — the standard FSDP+scan pattern.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 seq_sharded_cache: bool = True,
+                 sp_activations: bool = False,
+                 fsdp: bool = True,
+                 head_sharded_cache: bool = False,
+                 pin_attn_heads: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = axis_size(mesh, "model")
+        self.dp = dp_axes(mesh)
+        self.seq_sharded_cache = seq_sharded_cache
+        self.sp_activations = sp_activations
+        self.fsdp = fsdp
+        # §Perf: shard the decode cache on kv-heads instead of sequence when
+        # kv_heads divides the model axis — token writes become local DUS and
+        # decode attention needs no cross-shard softmax combine.
+        self.head_sharded_cache = head_sharded_cache
+        # §Perf it3: pinning q/kv head sharding through attention reshapes
+        # helps MLA (deepseek −13% collectives) but HURTS plain GQA
+        # (qwen2-vl +72%) — hence opt-in, chosen per arch.
+        self.pin_attn_heads = pin_attn_heads
+
+    def _add_fsdp(self, spec: P, shape: tuple[int, ...]) -> P:
+        if not self.fsdp or len(shape) < 2:
+            return spec
+        data = axis_size(self.mesh, "data")
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, shape)):
+            if p is None and dim % max(data, 1) == 0 and dim >= data:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    # -- helpers ------------------------------------------------------------
+    def g(self, dim: int, axis: str = "model") -> Optional[str]:
+        """axis if dim divides its size, else None (replicate)."""
+        return axis if dim % max(axis_size(self.mesh, axis), 1) == 0 else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameters -----------------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        cfg = self.cfg
+        m = self.model
+
+        def s(*names):
+            return P(*names)
+
+        # embeddings
+        if path.endswith("embed/table"):
+            return s(self.g(shape[0]), None)            # vocab over model
+        if path.endswith("embed/unembed"):
+            return s(None, self.g(shape[1]))
+        # attention
+        if re.search(r"(attn|cross)/wq$", path):
+            return s(None, self.g(shape[1]), None)
+        if re.search(r"(attn|cross)/w[kv]$", path):
+            return s(None, self.g(shape[1]), None)      # replicates if kv<m
+        if re.search(r"(attn|cross)/wo$", path):
+            return s(self.g(shape[0]), None, None)
+        if re.search(r"(attn|cross)/b[qkv]$", path):
+            return s(self.g(shape[0]), None)
+        # MLA
+        if path.endswith("attn/wq_a"):
+            return s(None, self.g(shape[1]))
+        if path.endswith("attn/wq_b"):
+            return s(None, self.g(shape[1]), None)
+        if path.endswith("attn/wkv_a"):
+            return s(None, None)
+        if re.search(r"attn/w[kv]_b$", path):
+            return s(None, self.g(shape[1]), None)      # heads over model
+        # MoE
+        if path.endswith("ffn/router"):
+            return s(None, None)
+        if re.search(r"ffn/w[ig]$", path) and len(shape) == 3:
+            if cfg.moe and cfg.moe.num_experts % m == 0:
+                return s("model", None, None)           # EP
+            return s(None, None, self.g(shape[2]))      # TP inside experts
+        if path.endswith("ffn/wo") and len(shape) == 3:
+            if cfg.moe and cfg.moe.num_experts % m == 0:
+                return s("model", None, None)
+            return s(None, self.g(shape[1]), None)
+        # dense MLP (incl. MoE shared experts)
+        if re.search(r"(ffn|shared)/w[ig]$", path):
+            return s(None, self.g(shape[1]))
+        if re.search(r"(ffn|shared)/wo$", path):
+            return s(self.g(shape[0]), None)
+        # RG-LRU
+        if re.search(r"rec/(w_gate|w_x)$", path):
+            return s(None, self.g(shape[1]))
+        if re.search(r"rec/(wa_gate|wx_gate)$", path):
+            return s(self.g(shape[0]), None, None)      # gate blocks = heads
+        if re.search(r"rec/conv_w$", path):
+            return s(None, self.g(shape[1]))
+        if path.endswith("rec/w_out"):
+            return s(self.g(shape[0]), None)
+        # SSD
+        if re.search(r"ssd/(w_z|w_x)$", path):
+            return s(None, self.g(shape[1]))
+        if path.endswith("ssd/w_dt"):
+            return s(None, self.g(shape[1]))
+        if re.search(r"ssd/conv_x$", path):
+            return s(None, self.g(shape[1]))
+        if path.endswith("ssd/out_proj"):
+            return s(self.g(shape[0]), None)
+        # everything else (norms, biases, scalars, B/C projections) replicates
+        return P()
+
+    def param_specs(self, params) -> dict:
+        def spec_of(path, leaf):
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            shape = leaf.shape
+            # embeddings stay model-sharded only (see DESIGN.md §5); norms/
+            # scalars replicate; everything else may pick up an FSDP dim.
+            skip_fsdp = ("embed/" in key or len(shape) < 2
+                         or re.search(r"(ln\d|norm|_b$|bias)", key))
+            # params stacked along a segment scan dim: rules see the per-layer
+            # shape; prepend None for the stack dim.
+            if self._is_stacked(key):
+                inner = self.param_spec(key, shape[1:])
+                if not skip_fsdp:
+                    inner = self._add_fsdp(inner, shape[1:])
+                return P(None, *inner)
+            spec = self.param_spec(key, shape)
+            if not skip_fsdp:
+                spec = self._add_fsdp(spec, shape)
+            return spec
+
+        return jax.tree_util.tree_map_with_path(spec_of, params)
+
+    def _is_stacked(self, key: str) -> bool:
+        # segment params contain "/subN/" (stacked); top-level embed / norms
+        # do not.
+        return "/sub" in key
+
+    # -- activations (shard callback for models.lm) ---------------------------
+    def act_shard(self):
+        def shard(x, name):
+            if name == "act" and x.ndim == 3:
+                dp = self._dp_for(x.shape[0])
+                sp = "model" if (self.sp_activations
+                                 and x.shape[1] % max(self.model, 1) == 0
+                                 and x.shape[1] >= self.model) else None
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, sp, None)))
+            if name == "mla_latent" and x.ndim == 3:
+                # §Perf: force the sequence all-gather to happen on the
+                # compressed latent (kv_lora+rope dims) — never on the
+                # per-head expansion, which is ~42x larger on the wire.
+                dp = self._dp_for(x.shape[0])
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, None, None)))
+            if name == "q_heads" and x.ndim == 5:
+                # pin head sharding through the attention reshapes so the
+                # backward pass keeps dq/dk head-sharded instead of
+                # all-reducing full-head gradients (§Perf it3)
+                if not self.pin_attn_heads:
+                    return x
+                dp = self._dp_for(x.shape[0])
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, None, self.g(x.shape[2]), None,
+                                    None)))
+            if name == "kv_heads" and x.ndim == 4:
+                if not self.pin_attn_heads:
+                    return x
+                dp = self._dp_for(x.shape[0])
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, None, self.g(x.shape[2]), None)))
+            if name == "logits" and x.ndim == 3:
+                dp = self._dp_for(x.shape[0])
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, None, self.g(x.shape[2]))))
+            if name == "kv_compact" and x.ndim == 4:
+                # §Perf: gather GQA kv across the sequence shards BEFORE the
+                # repeat-to-H expansion (kv_heads << heads): the wire moves
+                # the compact (B,S,K,E) form, the expansion stays local.
+                dp = self._dp_for(x.shape[0])
+                return jax.lax.with_sharding_constraint(
+                    x, self.named(P(dp, None, self.g(x.shape[2]), None)))
+            return x  # cache shardings are pinned via cache_spec
+
+        return shard
+
+    # -- batches ---------------------------------------------------------------
+    def _dp_for(self, batch_dim: int):
+        """dp axes if the batch dim divides them; else None (batch=1 cells)."""
+        return self.dp if batch_dim % axis_size(self.mesh, self.dp) == 0 \
+            else None
+
+    def _seq_axes(self, batch_dim: int, seq_dim: int):
+        """Sequence axis sharding for caches: when the batch can't shard
+        (long-context batch=1), spread the sequence over the whole mesh."""
+        if not self.seq_sharded_cache:
+            return None
+        candidates = ((("data", "model"),) if self._dp_for(batch_dim) is None
+                      else ()) + (("model",), None)
+        for cand in candidates:
+            if cand is None:
+                return None
+            if seq_dim % axis_size(self.mesh, cand) == 0:
+                return cand
+        return None
+
+    def batch_spec(self, batch_tree) -> dict:
+        def spec_of(path, leaf):
+            key = str(path[-1].key)
+            if key == "positions" and len(leaf.shape) == 3:
+                return P(None, self._dp_for(leaf.shape[1]), None)
+            return P(self._dp_for(leaf.shape[0]),
+                     *([None] * (len(leaf.shape) - 1)))
+
+        return jax.tree_util.tree_map_with_path(spec_of, batch_tree)
+
+    # -- caches ------------------------------------------------------------------
+    def cache_spec(self, cache_tree) -> dict:
+        """Decode caches: batch over dp (when divisible); kv sequence axis
+        over model — or over the whole mesh for unsharded-batch long-context
+        cells (context parallelism); recurrent states shard channels/heads
+        over model.  Leading dim of every leaf is the segment scan stack."""
+
+        def spec_of(path, leaf):
+            key = str(path[-1].key)
+            nd = len(leaf.shape)
+            if key in ("k", "v", "ck", "cv"):        # (L,B,T,K,E)
+                dp = self._dp_for(leaf.shape[1])
+                if (self.head_sharded_cache
+                        and leaf.shape[3] % max(self.model, 1) == 0):
+                    return P(None, dp, None, "model", None)
+                seq = self._seq_axes(leaf.shape[1], leaf.shape[2])
+                return P(None, dp, seq, None, None)
+            if key == "ckv" or key == "krope":       # (L,B,T,R)
+                dp = self._dp_for(leaf.shape[1])
+                seq = self._seq_axes(leaf.shape[1], leaf.shape[2])
+                return P(None, dp, seq, None)
+            dp = self._dp_for(leaf.shape[1])
+            if key == "h" and nd == 3:               # rec state (L,B,Dr)
+                return P(None, dp, self.g(leaf.shape[2]))
+            if key == "h" and nd == 5:               # ssd state (L,B,H,N,P)
+                return P(None, dp, self.g(leaf.shape[2]), None, None)
+            if key in ("x",):                        # ssd conv state (L,B,W,D)
+                return P(None, dp, None, self.g(leaf.shape[3]))
+            if key in ("b", "c"):
+                return P(None, dp, None, None)
+            if key == "conv" and nd == 4:            # rec conv (L,B,W,Dr)
+                return P(None, dp, None, self.g(leaf.shape[3]))
+            return P(None, dp, *([None] * (nd - 2)))
+
+        return jax.tree_util.tree_map_with_path(spec_of, cache_tree)
+
+    # -- train state ---------------------------------------------------------------
+    def state_spec(self, state) -> dict:
+        pspecs = self.param_specs(state["params"])
+        return {
+            "params": pspecs,
+            "opt": {
+                "m": pspecs,
+                "v": pspecs,
+                "step": P(),
+            },
+        }
+
+    def to_shardings(self, spec_tree):
+        return jax.tree.map(
+            lambda sp: self.named(sp), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))

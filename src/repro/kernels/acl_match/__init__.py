@@ -1,0 +1,1 @@
+from repro.kernels.acl_match.ops import acl_match  # noqa: F401

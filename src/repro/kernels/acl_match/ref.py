@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the firewall ACL match."""
+import jax.numpy as jnp
+
+
+def acl_match_ref(src_ip, rules):
+    """src_ip: (B,) int32; rules: (R,) int32 -> (B,) bool blocked."""
+    return jnp.any(src_ip[:, None] == rules[None, :], axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.crc16.ops import crc16_tag_kernel_op  # noqa: F401

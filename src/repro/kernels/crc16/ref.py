@@ -1,0 +1,2 @@
+"""Oracle for the CRC-16 tag kernel: the core's own implementation."""
+from repro.core.header import crc16_tag as crc16_tag_ref  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.maglev.ops import maglev_select  # noqa: F401

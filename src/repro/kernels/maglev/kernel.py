@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: Maglev L4-LB backend selection (paper §6.1).
+
+Per-packet hot path of the load balancer: hash the 5-tuple, index the Maglev
+lookup table, emit the backend VIP.  The (prime-sized) lookup table and the
+backend IP list stay resident in VMEM across grid steps while packet tiles
+stream through.  The double gather (table -> backend id -> backend ip) is
+fused into one VMEM-local pass — the TPU analogue of the paper's two chained
+MAT lookups.
+
+The hash matches nf.maglev._hash5 bit-exactly (int32 wrap semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _maglev_kernel(sip_ref, dip_ref, sp_ref, dp_ref, proto_ref,
+                   table_ref, bips_ref, out_ref, *, table_size: int):
+    h = sip_ref[...]
+    for ref in (dip_ref, sp_ref, dp_ref, proto_ref):
+        h = h * jnp.int32(1000003) ^ ref[...]
+    h = h & jnp.int32(0x7FFFFFFF)
+    idx = h % table_size                      # (BT, LANES)
+    table = table_ref[...][0]                 # (T,)
+    bips = bips_ref[...][0]                   # (N,)
+    out_ref[...] = bips[table[idx]]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def maglev_kernel(sip, dip, sp, dp, proto, table, bips, *, bt: int = 8,
+                  interpret: bool = True):
+    n, lanes = sip.shape
+    assert lanes == LANES and n % bt == 0
+    t = table.shape[1]
+    nb = bips.shape[1]
+    pkt_spec = pl.BlockSpec((bt, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_maglev_kernel, table_size=t),
+        grid=(n // bt,),
+        in_specs=[pkt_spec] * 5 + [
+            pl.BlockSpec((1, t), lambda i: (0, 0)),   # Maglev table resident
+            pl.BlockSpec((1, nb), lambda i: (0, 0)),  # backend IPs resident
+        ],
+        out_specs=pkt_spec,
+        out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.int32),
+        interpret=interpret,
+    )(sip, dip, sp, dp, proto, table, bips)

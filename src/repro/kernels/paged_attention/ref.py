@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention: gather pages, dense attend."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """q: (B, K, G, E); k_pages/v_pages: (P, page, K, E);
+    page_table: (B, MP) int32 (-1 pad); lengths: (B,).
+    Returns (B, K, G, E)."""
+    b, kh, g, e = q.shape
+    page = k_pages.shape[1]
+    mp = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    k = k_pages[pt].reshape(b, mp * page, kh, e)       # (B, T, K, E)
+    v = v_pages[pt].reshape(b, mp * page, kh, e)
+    s = jnp.einsum("bkge,btke->bkgt", q, k,
+                   preferred_element_type=jnp.float32) * (e ** -0.5)
+    pos = jnp.arange(mp * page)[None, :]
+    mask = (pos < lengths[:, None]) & (page_table >= 0).repeat(page, axis=1)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btke->bkge", (p / l).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

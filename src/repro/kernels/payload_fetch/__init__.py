@@ -1,0 +1,1 @@
+from repro.kernels.payload_fetch.ops import payload_fetch  # noqa: F401

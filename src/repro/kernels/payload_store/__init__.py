@@ -1,0 +1,1 @@
+from repro.kernels.payload_store.ops import payload_store  # noqa: F401

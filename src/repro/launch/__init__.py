@@ -1,0 +1,1 @@
+"""Launch layer: meshes, dry-run, end-to-end train/serve drivers."""

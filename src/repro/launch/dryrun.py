@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, resolves sharding rules,
+lowers the cell's step function against ShapeDtypeStruct inputs, compiles it,
+and records:
+  * memory_analysis()   — proves the cell fits per-device HBM,
+  * cost_analysis()     — HLO FLOPs / bytes for the roofline,
+  * collective bytes    — parsed from the post-SPMD compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute result sizes x ring factors).
+
+Results go to benchmarks/dryrun_results/<cell>.json; benchmarks/roofline.py
+turns them into the EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.distributed.sharding import Rules
+from repro.launch import inputs as inp
+from repro.launch.accounting import accounting_blocks, probe_plan
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import LM
+from repro.training.train_step import TrainConfig, train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/dryrun_results")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|c64|c128)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+(?:,\d+)*)\]<=")
+
+
+def _bytes_of_shapes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(d) for d in m.group(1).split(",")]
+        n = 1
+        for d in dims[1:]:
+            n *= d
+        return max(n, 1)
+    return 2
+
+
+_ENTRY_OP_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([\d,]*)\][^=]*?\s([a-z][\w-]*)\(")
+
+
+def entry_op_bytes(hlo_text: str) -> dict:
+    """Top-level (entry computation) result bytes by opcode.
+
+    Approximates real buffer traffic far better than cost_analysis's
+    'bytes accessed' on the CPU backend, which also counts fusion-internal
+    reads and the f32 upcasts CPU inserts around bf16 dots (TPU executes
+    bf16 natively) — see EXPERIMENTS.md §Perf for the comparison.
+    """
+    hist: dict[str, float] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            break
+        if not in_entry:
+            continue
+        m = _ENTRY_OP_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        hist[op] = hist.get(op, 0.0) + n * _DTYPE_BYTES[dt]
+    return hist
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind byte totals from a post-SPMD HLO module.
+
+    Per-device ring-model wire factors on the op's *result* bytes:
+      all-gather / all-to-all: (n-1)/n  (result is the full gathered array),
+      reduce-scatter: (n-1)            (result is the 1/n shard),
+      all-reduce: 2(n-1)/n (reduce-scatter + all-gather phases),
+      collective-permute: 1.
+    ``n`` parsed from replica_groups (list or iota form).
+    """
+    stats = {k: {"count": 0, "bytes": 0.0} for k in
+             ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: count the -start only
+        size = _bytes_of_shapes(m.group(1))
+        n = _group_size(line)
+        factor = {"all-gather": (n - 1) / n,
+                  "reduce-scatter": float(n - 1),
+                  "all-reduce": 2 * (n - 1) / n,
+                  "all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[kind]
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += size * factor
+    stats["total_bytes"] = sum(
+        v["bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def build_step(lm: LM, shape, rules: Rules):
+    """Returns (fn, in_shardings, out_shardings, donate) for the cell."""
+    shard = rules.act_shard()
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+
+        def fn(state, batch):
+            return train_step(lm, tcfg, state, batch, shard=shard)
+
+        state_struct, batch_struct = inp.input_specs(lm, shape)
+        state_sh = rules.to_shardings(rules.state_spec(state_struct))
+        batch_sh = rules.to_shardings(rules.batch_spec(batch_struct))
+        return fn, (state_sh, batch_sh), (state_sh, None), (0,)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, batch, cache_len=shape.seq_len,
+                              shard=shard)
+
+        params_struct, batch_struct = inp.input_specs(lm, shape)
+        p_sh = rules.to_shardings(rules.param_specs(params_struct))
+        b_sh = rules.to_shardings(rules.batch_spec(batch_struct))
+        return fn, (p_sh, b_sh), None, ()
+
+    def fn(params, cache, tokens, positions):
+        return lm.decode_step(params, cache, tokens, positions, shard=shard)
+
+    params_struct, cache_struct, tok, pos = inp.input_specs(lm, shape)
+    p_sh = rules.to_shardings(rules.param_specs(params_struct))
+    c_sh = rules.to_shardings(rules.cache_spec(cache_struct))
+    tok_sh = rules.named(P(rules._dp_for(tok.shape[0])))
+    return fn, (p_sh, c_sh, tok_sh, tok_sh), (None, c_sh), (1,)
+
+
+def _compile_once(lm: LM, shape, mesh, rules: Rules):
+    """Lower + compile one step function.  Returns (compiled, metrics dict)."""
+    with mesh:
+        fn, in_sh, out_sh, donate = build_step(lm, shape, rules)
+        args = inp.input_specs(lm, shape)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+    ob = entry_op_bytes(compiled.as_text())
+    flat = {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "entry_bytes": sum(ob.values()),
+        "transcendentals": cost.get("transcendentals"),
+        "coll_total_bytes": coll["total_bytes"],
+    }
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        flat[f"coll_{k}_bytes"] = coll[k]["bytes"]
+        flat[f"coll_{k}_count"] = coll[k]["count"]
+    memd = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+    }
+    return flat, memd
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = RESULTS_DIR, verbose: bool = True,
+             rules_overrides: dict | None = None,
+             lm_overrides: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    cell = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    if not ok:
+        rec = {"cell": cell, "status": "skipped", "reason": why}
+        _write(out_dir, cell, rec)
+        if verbose:
+            _print_cell(rec)
+        return rec
+
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    lm_kw = lm_overrides or {}
+    # default sharding policy per shape kind: training activations are
+    # sequence-sharded (Megatron SP) so per-layer residuals fit HBM
+    rkw = {"sp_activations": shape.kind == "train"}
+    rkw.update(rules_overrides or {})
+    t0 = time.time()
+    try:
+        # 1. full-config compile: proves sharding coherence + memory fit
+        lm = LM(cfg, **lm_kw)
+        rules = Rules(cfg, mesh, **rkw)
+        full_cost, memd = _compile_once(lm, shape, mesh, rules)
+        t_full = time.time() - t0
+
+        # 2. accounting probes: unrolled small models -> exact per-layer cost
+        probes, combine = probe_plan(cfg, shape)
+        probe_cost: dict[str, dict] = {}
+        for pr in probes:
+            plm = LM(pr.cfg, unroll=True,
+                     attn_blocks=accounting_blocks(pr.shape.seq_len), **lm_kw)
+            prules = Rules(pr.cfg, mesh, **rkw)
+            probe_cost[pr.name], _ = _compile_once(plm, pr.shape, mesh,
+                                                   prules)
+        exact = combine(probe_cost)
+        t_probe = time.time() - t0 - t_full
+
+        rec = {
+            "cell": cell,
+            "status": "ok",
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "devices": int(len(mesh.devices.reshape(-1))),
+            "compile_s": round(t_full, 1),
+            "probe_s": round(t_probe, 1),
+            "memory": memd,
+            "cost_scan_undercounted": full_cost,
+            "cost": exact,
+            "probes": probe_cost,
+        }
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        rec = {"cell": cell, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    _write(out_dir, cell, rec)
+    if verbose:
+        _print_cell(rec)
+    return rec
+
+
+def _write(out_dir: str, cell: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def _print_cell(rec: dict) -> None:
+    if rec["status"] == "ok":
+        m = rec["memory"]
+        c = rec["cost"]
+        print(f"[ok] {rec['cell']}: compile={rec['compile_s']}s+"
+              f"{rec['probe_s']}s flops={c['flops']:.3e} "
+              f"bytes={c['bytes_accessed']:.3e} "
+              f"coll={c['coll_total_bytes']:.3e}B "
+              f"args={m['argument_bytes']} temp={m['temp_bytes']}", flush=True)
+    elif rec["status"] == "skipped":
+        print(f"[skip] {rec['cell']}: {rec['reason']}")
+    else:
+        print(f"[ERR] {rec['cell']}: {rec['error']}")
+
+
+def optimized_overrides(arch: str, shape_name: str) -> tuple[dict, dict]:
+    """The §Perf-confirmed configuration per (arch x shape) — see
+    EXPERIMENTS.md §Perf for the iteration log that selected these."""
+    shape = SHAPES[shape_name]
+    cfg = configs.get(arch)
+    lm_kw: dict = {}
+    rules_kw: dict = {}
+    if shape.kind == "decode":
+        # fsdp off: params stay resident, no per-token weight gathers —
+        # EXCEPT for MoE archs, where FSDP's D-dim sharding doubles as
+        # data-axis compute slicing for the expert einsums (removing it
+        # replicated expert compute across the data axis: 2x flops, 4x
+        # bytes on deepseek — refuted, see §Perf generalization note).
+        if cfg.moe is None:
+            rules_kw["fsdp"] = False
+        # uniform-position DUS writes only pay off when the cache can be
+        # head-sharded (writes become shard-local); with a seq-sharded cache
+        # GSPMD lowers them to masked full-buffer selects (§Perf it1/it4 +
+        # generalization check)
+        if (cfg.mla is None and cfg.num_kv_heads
+                and cfg.num_kv_heads % 16 == 0):
+            lm_kw["assume_uniform_decode"] = True
+            rules_kw["head_sharded_cache"] = True
+    else:
+        lm_kw["vocab_parallel"] = True
+        if cfg.mla is not None:
+            rules_kw["pin_attn_heads"] = True  # helps MLA, hurts plain GQA
+    return lm_kw, rules_kw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf-confirmed optimizations "
+                         "(results tagged __opt)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = configs.names() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                lm_kw: dict = {}
+                rules_kw: dict = {}
+                tag = ""
+                if args.opt:
+                    lm_kw, rules_kw = optimized_overrides(arch, shape_name)
+                    tag = "opt"
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               lm_overrides=lm_kw, rules_overrides=rules_kw,
+                               tag=tag)
+                failures += rec["status"] == "error"
+    print(f"dry-run complete; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract args for the step function a
+given (arch x shape) cell lowers:
+  train_*   -> (train_state, batch)        for train_step
+  prefill_* -> (params, batch)             for prefill
+  decode_*/long_* -> (params, cache, tokens, positions) for decode_step
+
+Modality frontends are STUBS per the assignment brief: the vlm cell's batch
+carries precomputed patch embeddings (B, NV, D); the audio cell's batch
+carries precomputed frames (B, S, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.common import DTYPE
+from repro.models.lm import LM
+
+VLM_PATCH_TOKENS = 256
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s)), "labels": sds((b, s))}
+    if cfg.family == "vlm":
+        batch["positions"] = sds((3, b, s))
+        batch["vision_embeds"] = sds((b, VLM_PATCH_TOKENS, cfg.d_model), DTYPE)
+    if cfg.enc_layers:
+        batch["enc_frames"] = sds((b, s, cfg.d_model), DTYPE)
+    return batch
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    batch = train_batch_struct(cfg, shape)
+    del batch["labels"]
+    return batch
+
+
+def train_state_struct(lm: LM):
+    from repro.training.train_step import init_train_state
+    return jax.eval_shape(lambda: init_train_state(lm, jax.random.key(0)))
+
+
+def params_struct(lm: LM):
+    return jax.eval_shape(lambda: lm.init_params(jax.random.key(0)))
+
+
+def decode_inputs_struct(lm: LM, shape: ShapeConfig):
+    cfg = lm.cfg
+    b, s = shape.global_batch, shape.seq_len
+    cache = lm.cache_struct(b, s, enc_len=s if cfg.enc_layers else 0)
+    tokens = sds((b,))
+    positions = sds((b,))
+    return params_struct(lm), cache, tokens, positions
+
+
+def input_specs(lm: LM, shape: ShapeConfig):
+    """The abstract argument tuple for the cell's step function."""
+    cfg = lm.cfg
+    if shape.kind == "train":
+        return (train_state_struct(lm), train_batch_struct(cfg, shape))
+    if shape.kind == "prefill":
+        return (params_struct(lm), prefill_batch_struct(cfg, shape))
+    return decode_inputs_struct(lm, shape)

@@ -1,0 +1,176 @@
+"""End-to-end training driver with fault tolerance.
+
+Production behaviours implemented (exercised by tests/ and examples/):
+  * automatic resume: on start, the latest checkpoint in --ckpt-dir is
+    restored (params+opt+step) and the data stream skips ahead (stateless
+    ``batch_at(step)`` — no data duplication across restarts);
+  * periodic async checkpointing (previous save joined before the next);
+  * straggler watchdog: per-step wall-time EWMA; steps slower than
+    ``straggler_factor`` x EWMA are logged with their step index (on real
+    fleets this feeds the scheduler's hot-spare logic — here it is the
+    observable hook);
+  * elastic rescale: restoring onto a different mesh re-places every shard
+    (training/checkpoint.py restore + current Rules' shardings);
+  * optional int8 error-feedback gradient compression (--compress-grads).
+
+On CPU this trains the reduced configs (examples/train_tiny_lm.py); on a real
+fleet the same driver runs the full configs under the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.reduced import reduced
+from repro.models.lm import LM
+from repro.training import checkpoint as ckpt
+from repro.training import compression
+from repro.training.data import DataConfig, SyntheticStream
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, train_step
+
+
+@dataclasses.dataclass
+class RunConfig:
+    arch: str
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    stop_after: Optional[int] = None  # simulate a crash at this step
+    lr: float = 3e-4
+    reduced: bool = True
+    compress_grads: bool = False
+    straggler_factor: float = 3.0
+    seed: int = 0
+    log_every: int = 10
+
+
+def train(run: RunConfig, mesh=None, rules=None) -> dict:
+    cfg = configs.get(run.arch)
+    if run.reduced:
+        cfg = reduced(cfg)
+    lm = LM(cfg)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=run.lr, total_steps=run.steps,
+                                         warmup_steps=max(run.steps // 10, 1)))
+    stream = SyntheticStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=run.seq_len,
+        global_batch=run.global_batch, seed=run.seed))
+
+    state = init_train_state(lm, jax.random.key(run.seed))
+    err_state = (compression.init_error_state(state["params"])
+                 if run.compress_grads else None)
+    start_step = 0
+    if run.ckpt_dir:
+        latest = ckpt.latest_step(run.ckpt_dir)
+        if latest is not None:
+            template = jax.eval_shape(lambda: init_train_state(
+                lm, jax.random.key(run.seed)))
+            shardings = None
+            if rules is not None:
+                shardings = rules.to_shardings(rules.state_spec(template))
+            state = ckpt.restore(run.ckpt_dir, latest, template, shardings)
+            start_step = latest
+            print(f"[train] resumed from step {latest}")
+
+    shard = rules.act_shard() if rules is not None else (lambda x, n: x)
+
+    def step_fn(state, batch, err):
+        if err is not None:
+            def xform(grads):
+                g2, new_err = compression.compress_decompress(grads, err)
+                xform.new_err = new_err
+                return g2
+            # compression must be traced inside jit; wrap functionally:
+            def full(state, batch, err):
+                def loss_grads(s, b):
+                    return train_step(lm, tcfg, s, b, shard=shard,
+                                      grad_transform=None)
+                # run train_step with a transform closure capturing err
+                holder = {}
+
+                def gt(grads):
+                    g2, new_err = compression.compress_decompress(grads, err)
+                    holder["err"] = new_err
+                    return g2
+
+                new_state, metrics = train_step(lm, tcfg, state, batch,
+                                                shard=shard, grad_transform=gt)
+                return new_state, metrics, holder["err"]
+
+            return full(state, batch, err)
+        new_state, metrics = train_step(lm, tcfg, state, batch, shard=shard)
+        return new_state, metrics, None
+
+    jit_kwargs = {}
+    if rules is not None:
+        spec = rules.to_shardings(rules.state_spec(state))
+        jit_kwargs = dict(in_shardings=(spec, None, None),
+                          out_shardings=(spec, None, None))
+    jstep = jax.jit(step_fn, donate_argnums=(0,), **jit_kwargs)
+
+    ewma = None
+    slow_steps = []
+    losses = []
+    pending_save = None
+    stop_at = min(run.steps, run.stop_after or run.steps)
+    for step in range(start_step, stop_at):
+        batch = stream.batch_at(step, jax.process_index(),
+                                jax.process_count())
+        t0 = time.time()
+        state, metrics, err_state = jstep(state, batch, err_state)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if dt > run.straggler_factor * ewma and step > start_step + 3:
+            slow_steps.append((step, round(dt, 3)))
+            print(f"[watchdog] straggler step {step}: {dt:.3f}s "
+                  f"(ewma {ewma:.3f}s)")
+        losses.append(loss)
+        if run.log_every and step % run.log_every == 0:
+            print(f"[train] step {step} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if run.ckpt_dir and (step + 1) % run.ckpt_every == 0:
+            if pending_save is not None:
+                pending_save.join()
+            pending_save = ckpt.save(run.ckpt_dir, step + 1, state,
+                                     blocking=False)
+    if pending_save is not None:
+        pending_save.join()
+    if run.ckpt_dir:
+        ckpt.save(run.ckpt_dir, stop_at, state)
+    return {"losses": losses, "slow_steps": slow_steps, "state": state,
+            "final_loss": losses[-1] if losses else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (requires a real fleet)")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    out = train(RunConfig(
+        arch=args.arch, steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, lr=args.lr, reduced=not args.full,
+        compress_grads=args.compress_grads))
+    print(f"final loss: {out['final_loss']:.4f}; "
+          f"stragglers: {out['slow_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM substrate: composable JAX model definitions for the assigned archs."""

@@ -1,0 +1,308 @@
+"""Shared transformer building blocks (functional, explicit param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; compute dtype bf16, norm scales and
+    rotary tables f32, softmax/logits accumulation f32.
+  * einsum dim names: B batch, S/T seq (q/kv), D model, H q-heads, K kv-heads,
+    G q-heads-per-kv (H = K*G), E head_dim, F d_ff, V vocab.
+  * attention is blockwise (flash-style running softmax via lax.scan over kv
+    blocks nested in a scan over q blocks) so 32k+ prefill never materializes
+    (S, S) score matrices.  The TPU production path swaps in the Pallas paged
+    kernel for decode (repro.kernels.paged_attention); the jnp path here is
+    what the dry-run lowers (identical FLOPs/collectives, XLA-native HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def ninit(key, shape, scale, dtype=DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype=DTYPE):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim, theta, mrope_sections=None):
+    """positions: (B, S) int32, or (3, B, S) for M-RoPE.
+    Returns (cos, sin): (B, S, head_dim/2) f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)            # (B, S)
+        ang = pos[..., None] * inv_freq                # (B, S, half)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        t, h, w = mrope_sections
+        assert t + h + w == half, (mrope_sections, half)
+        sec = jnp.concatenate([
+            jnp.zeros((t,), jnp.int32),
+            jnp.ones((h,), jnp.int32),
+            jnp.full((w,), 2, jnp.int32),
+        ])                                             # (half,) in {0,1,2}
+        pos = positions.astype(jnp.float32)            # (3, B, S)
+        pos_c = jnp.take(pos, sec, axis=0)             # (half, B, S)
+        ang = jnp.moveaxis(pos_c, 0, -1) * inv_freq    # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, N, E); cos/sin: (B, S, E/2).  Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        q_offset=0, q_block=512, kv_block=1024,
+                        unroll=False):
+    """q: (B, S, K, G, E); k, v: (B, T, K, E).  Returns (B, S, K, G, E).
+
+    Running-softmax over kv blocks nested in a scan over q blocks; scores are
+    (B, K, G, q_block, kv_block) f32 tiles only.  ``q_offset`` positions the
+    query block absolutely (prefill continuation / decode windows).
+
+    ``unroll=True`` replaces both scans with Python loops — identical math,
+    used by the dry-run accounting pass because XLA's cost analysis counts
+    while-loop bodies exactly once (see launch/accounting.py).
+    """
+    b, s, kh, g, e = q.shape
+    t = k.shape[1]
+    ve = v.shape[-1]  # value head dim may differ (MLA)
+    assert k.shape[-1] == e, (k.shape, e)
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, t)
+    assert s % q_block == 0 and t % kv_block == 0, (s, q_block, t, kv_block)
+    nq, nkv = s // q_block, t // kv_block
+    scale = e ** -0.5
+
+    qb = q.reshape(b, nq, q_block, kh, g, e)
+    kb = k.reshape(b, nkv, kv_block, kh, e)
+    vb = v.reshape(b, nkv, kv_block, kh, ve)
+
+    q_pos_base = jnp.arange(q_block) + q_offset
+    kv_pos_base = jnp.arange(kv_block)
+
+    def outer(_, qi):
+        qblk, qidx = qi                      # (B, q_block, K, G, E), scalar
+        qpos = q_pos_base + qidx * q_block   # (q_block,)
+
+        def inner(carry, kvi):
+            m, l, acc = carry
+            kblk, vblk, kvidx = kvi
+            kvpos = kv_pos_base + kvidx * kv_block
+            srel = jnp.einsum("bqkge,btke->bkgqt", qblk, kblk,
+                              preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= qpos[:, None] >= kvpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kvpos[None, :]) < window
+            srel = jnp.where(mask[None, None, None], srel, NEG_INF)
+            m_new = jnp.maximum(m, srel.max(axis=-1))
+            p = jnp.exp(srel - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btke->bkgqe", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_block, ve), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(nkv):
+                carry, _ = inner(carry, (kb[:, j], vb[:, j], j))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                inner, (m0, l0, a0),
+                (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                 jnp.arange(nkv)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,q_block,K,G,E)
+
+    if unroll:
+        outs = jnp.stack([outer(None, (qb[:, i], i))[1] for i in range(nq)])
+    else:
+        _, outs = jax.lax.scan(outer, None,
+                               (jnp.moveaxis(qb, 1, 0), jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, kh, g, ve)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None):
+    """Single-token attention over a (possibly seq-sharded) cache.
+
+    q: (B, K, G, E); caches: (B, T, K, E); lengths: (B,) tokens valid
+    (the new token's kv must already be written at lengths-1).
+    Softmax reductions over the sharded T axis lower to all-reduces under
+    GSPMD — the distributed-decode combine described in DESIGN.md §5.
+    """
+    b, t, kh, e = k_cache.shape
+    scale = e ** -0.5
+    s = jnp.einsum("bkge,btke->bkgt", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(t)[None, :]                        # (1, T)
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btke->bkge", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, h, k, e = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": ninit(ks[0], (d, h, e), d ** -0.5),
+        "wk": ninit(ks[1], (d, k, e), d ** -0.5),
+        "wv": ninit(ks[2], (d, k, e), d ** -0.5),
+        "wo": ninit(ks[3], (h, e, d), (h * e) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((h, e))
+        p["bk"] = zeros((k, e))
+        p["bv"] = zeros((k, e))
+    if cfg.qk_norm:
+        p["q_norm"] = ones((e,))
+        p["k_norm"] = ones((e,))
+    return p
+
+
+def attn_qkv(p, x, cfg: ModelConfig, cos, sin):
+    """Project + position-encode.  x: (B,S,D) -> q (B,S,K,G,E), k/v (B,S,K,E)."""
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    g = h // k
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    kx = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    vx = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        kx = kx + p["bk"]
+        vx = vx + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        kx = rmsnorm(kx, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    kx = apply_rope(kx, cos, sin)
+    b, s = q.shape[:2]
+    return q.reshape(b, s, k, g, cfg.head_dim), kx, vx
+
+
+def attn_out(p, o):
+    """o: (B, S, K, G, E) -> (B, S, D)."""
+    b, s, k, g, e = o.shape
+    return jnp.einsum("bshe,hed->bsd", o.reshape(b, s, k * g, e), p["wo"])
+
+
+# --------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": ninit(ks[0], (d_model, d_ff), d_model ** -0.5),
+        "wg": ninit(ks[1], (d_model, d_ff), d_model ** -0.5),
+        "wo": ninit(ks[2], (d_ff, d_model), d_ff ** -0.5),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    gate = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    up = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    a = jax.nn.gelu(gate) if act == "gelu" else jax.nn.silu(gate)
+    return jnp.einsum("bsf,fd->bsd", a * up, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    v = cfg.vocab_padded()
+    ks = jax.random.split(key, 2)
+    p = {"table": ninit(ks[0], (v, cfg.d_model), cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ninit(ks[1], (cfg.d_model, v), cfg.d_model ** -0.5)
+    return p
+
+
+def embed_apply(p, tokens, cfg: ModelConfig, one_hot_matmul: bool = False):
+    if one_hot_matmul:
+        # Vocab-parallel gather (§Perf): with the table sharded on vocab over
+        # "model", jnp.take makes GSPMD all-gather the whole table; the
+        # one-hot contraction keeps the table sharded and all-reduces only
+        # the (B,S,D) result.
+        oh = jax.nn.one_hot(tokens, p["table"].shape[0], dtype=p["table"].dtype)
+        x = jnp.einsum("bsv,vd->bsd", oh, p["table"])
+    else:
+        x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma scaling
+    return x
+
+
+def unembed_apply(p, x, cfg: ModelConfig, shard=None):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    if shard is not None:
+        # keep logits vocab-sharded (Megatron vocab-parallel head) so the
+        # weight is never gathered; the loss reduces over the shards
+        logits = shard(logits, "logits")
+    return logits

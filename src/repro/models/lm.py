@@ -1,0 +1,635 @@
+"""Unified causal-LM wrapper over the assigned architecture families.
+
+One code path per *block kind*; an architecture is a list of homogeneous
+segments, each executed as a ``lax.scan`` over stacked per-layer params (remat
+applied to the scan body) so lowering stays compact even for 80-layer models:
+
+  dense / vlm        [("blocks", ("dense",), L)]
+  moe (mixtral)      [("blocks", ("moe",), L)]           + SWA window
+  moe+mla (deepseek) [("d0", ("mla_dense",), 1), ("blocks", ("mla_moe",), L-1)]
+  hybrid (griffin)   [("sb", ("rec","rec","attn_local"), L//3), ("tail", ("rec","rec"), 1)]
+  ssm (mamba2)       [("blocks", ("ssd",), L)]
+  audio (enc-dec)    encoder [("enc", ("enc",), Le)] + decoder [("dec", ("dec",), L)]
+
+Phases: ``train`` (full seq, loss), ``prefill`` (full seq -> cache),
+``decode`` (one token against the cache).  Caches are stacked along each
+segment's scan dim.  ``shard`` is a callback hook through which the launch
+layer injects ``with_sharding_constraint`` (identity on CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssd as ssd_mod
+
+Shard = Callable[[jax.Array, str], jax.Array]
+_identity: Shard = lambda x, name: x
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kinds: tuple[str, ...]
+    count: int
+
+
+def segments_for(cfg: ModelConfig) -> list[Segment]:
+    l = cfg.num_layers
+    if cfg.family == "ssm":
+        return [Segment("blocks", ("ssd",), l)]
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        full, rem = divmod(l, len(pat))
+        segs = [Segment("sb", tuple(k if k != "attn" else "attn_local"
+                                    for k in pat), full)]
+        if rem:
+            segs.append(Segment("tail", tuple(
+                k if k != "attn" else "attn_local" for k in pat[:rem]), 1))
+        return segs
+    if cfg.family == "audio":
+        return [Segment("dec", ("dec",), l)]
+    if cfg.moe is not None:
+        if cfg.mla is not None:
+            fd = cfg.moe.first_dense_layers
+            segs = []
+            if fd:
+                segs.append(Segment("dense0", ("mla_dense",), fd))
+            segs.append(Segment("blocks", ("mla_moe",), l - fd))
+            return segs
+        return [Segment("blocks", ("moe",), l)]
+    return [Segment("blocks", ("dense",), l)]
+
+
+# --------------------------------------------------------------------------
+# block init / apply, by kind
+# --------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": cm.ones((d,))}
+    if kind in ("dense", "moe", "attn_local", "enc", "dec"):
+        p["attn"] = cm.attn_init(ks[0], cfg)
+    if kind in ("mla_dense", "mla_moe"):
+        p["attn"] = mla_mod.mla_init(ks[0], cfg)
+    if kind == "rec":
+        p["rec"] = rg_mod.rglru_init(ks[0], cfg)
+    if kind == "ssd":
+        p["ssd"] = ssd_mod.ssd_init(ks[0], cfg)
+        return p  # the mamba block is the whole layer
+    if kind == "dec":
+        p["ln_cross"] = cm.ones((d,))
+        p["cross"] = cm.attn_init(ks[3], cfg)
+    p["ln2"] = cm.ones((d,))
+    if kind in ("moe", "mla_moe"):
+        p["ffn"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = cm.mlp_init(ks[1], d, cfg.d_ff)
+    return p
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    cos: jax.Array                       # (B, S, E/2)
+    sin: jax.Array
+    phase: str                           # train | prefill | decode
+    shard: Shard = _identity
+    lengths: Optional[jax.Array] = None  # (B,) decode: tokens valid incl. new
+    cache_len: int = 0
+    enc_out: Optional[jax.Array] = None  # audio: encoder output (B,Se,D)
+    enc_cos: Optional[jax.Array] = None
+    enc_sin: Optional[jax.Array] = None
+    unroll: bool = False                 # accounting mode: no lax.scan loops
+    attn_blocks: Optional[tuple] = None  # (q_block, kv_block) override
+    uniform_pos: Optional[jax.Array] = None  # scalar decode position (§Perf)
+
+
+def _prefill_cache_layout(arr, cache_len: int):
+    """Lay a full-sequence (B, S, ...) tensor into a (B, cache_len, ...) ring
+    buffer so that token t lands at slot t % cache_len (matching decode's
+    ring write).  cache_len >= S pads with zeros."""
+    s = arr.shape[1]
+    if cache_len >= s:
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, cache_len - s)
+        return jnp.pad(arr, pad)
+    t0 = s - cache_len
+    return jnp.roll(arr[:, -cache_len:], t0 % cache_len, axis=1)
+
+
+def _ring_write(buf, new, lengths, shard: Shard, uniform_pos=None):
+    """Write the new token's row at slot (lengths-1) % ring_len.
+
+    With ``uniform_pos`` (all requests at the same position — the dry-run
+    decode shapes and aligned serving buckets) the write is a single
+    dynamic_update_slice, which XLA executes (and costs) in place; the
+    general per-request path is a batched scatter that reads+writes the
+    whole buffer on some backends (§Perf iteration 1)."""
+    ring = buf.shape[1]
+    if uniform_pos is not None:
+        idx = (uniform_pos - 0) % ring  # uniform_pos is the new token's slot
+        upd = new[:, :1] if new.ndim == buf.ndim else new[:, None]
+        start = (0, idx) + (0,) * (buf.ndim - 2)
+        return shard(jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype),
+                                                  start), "cache_kv")
+    idx = (lengths - 1) % ring
+    bidx = jnp.arange(new.shape[0])
+    return shard(buf.at[bidx, idx].set(new[:, 0]), "cache_kv")
+
+
+def _attn_sublayer(p, x, ctx: Ctx, cache, *, window, causal=True):
+    cfg = ctx.cfg
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = cm.attn_qkv(p["attn"], h, cfg, ctx.cos, ctx.sin)
+    if ctx.phase == "decode":
+        cache = {"k": _ring_write(cache["k"], k, ctx.lengths, ctx.shard,
+                                  ctx.uniform_pos),
+                 "v": _ring_write(cache["v"], v, ctx.lengths, ctx.shard,
+                                  ctx.uniform_pos)}
+        cl = cache["k"].shape[1]
+        valid = jnp.minimum(ctx.lengths, cl)
+        win = None if (window is None or window >= cl) else window
+        o = cm.decode_attention(q[:, 0], cache["k"], cache["v"], valid,
+                                window=win)[:, None]
+    else:
+        kw = {}
+        if ctx.attn_blocks:
+            kw = {"q_block": ctx.attn_blocks[0], "kv_block": ctx.attn_blocks[1]}
+        # TP-friendly layout: expand kv-heads to full H so the head dim (the
+        # "model"-sharded one) is a single contiguous axis.  k/v are
+        # replicated across model shards; the expansion lowers to a local
+        # broadcast slice, never a collective (DESIGN.md §5).  The sequence
+        # all-gather (SP) is pinned to the COMPACT (B,S,K,E) form first —
+        # see Rules.act_shard("kv_compact") and EXPERIMENTS.md §Perf.
+        b_, s_, kh_, g_, e_ = q.shape
+        k = ctx.shard(k, "kv_compact")
+        v = ctx.shard(v, "kv_compact")
+        qf = ctx.shard(q.reshape(b_, s_, kh_ * g_, 1, e_), "q_heads")
+        kf = ctx.shard(jnp.repeat(k, g_, axis=2), "kv_heads")
+        vf = ctx.shard(jnp.repeat(v, g_, axis=2), "kv_heads")
+        o = cm.blockwise_attention(qf, kf, vf, causal=causal, window=window,
+                                   unroll=ctx.unroll, **kw)
+        o = o.reshape(b_, s_, kh_, g_, e_)
+        if ctx.phase == "prefill":
+            cl = ctx.cache_len if window is None else min(ctx.cache_len, window)
+            cache = {"k": _prefill_cache_layout(k, cl),
+                     "v": _prefill_cache_layout(v, cl)}
+    x = x + cm.attn_out(p["attn"], o)
+    return x, cache
+
+
+def _cross_sublayer(p, x, ctx: Ctx, cache):
+    """Encoder-decoder cross attention; kv comes from enc_out (cached)."""
+    cfg = ctx.cfg
+    h = cm.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+    hq = cfg.num_heads // cfg.num_kv_heads
+    if ctx.phase == "decode":
+        ck, cv = cache["ck"], cache["cv"]
+    else:
+        # zero-position rope on cross kv (relative positions are meaningless
+        # across modalities; standard practice is no rope on cross-attn)
+        ck = jnp.einsum("bsd,dke->bske", ctx.enc_out, p["cross"]["wk"])
+        cv = jnp.einsum("bsd,dke->bske", ctx.enc_out, p["cross"]["wv"])
+        if ctx.phase == "prefill":
+            cache = {"ck": ck, "cv": cv}
+    q = jnp.einsum("bsd,dhe->bshe", h, p["cross"]["wq"])
+    b, s = q.shape[:2]
+    q = q.reshape(b, s, cfg.num_kv_heads, hq, cfg.head_dim)
+    if ctx.phase == "decode":
+        lengths = jnp.full((b,), ck.shape[1], jnp.int32)
+        o = cm.decode_attention(q[:, 0], ck, cv, lengths)[:, None]
+    else:
+        o = cm.blockwise_attention(q, ck, cv, causal=False)
+    x = x + cm.attn_out(p["cross"], o)
+    return x, cache
+
+
+def _ffn_sublayer(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None and isinstance(p["ffn"], dict) \
+            and "router" in p["ffn"]:
+        out, aux = moe_mod.moe_apply(p["ffn"], h, cfg, cfg.act)
+        return x + out, aux
+    return x + cm.mlp_apply(p["ffn"], h, cfg.act), 0.0
+
+
+def _mla_sublayer(p, x, ctx: Ctx, cache):
+    cfg = ctx.cfg
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if ctx.phase == "decode":
+        c_kv_new, k_rope_new = mla_mod.mla_latent(p["attn"], h, cfg,
+                                                  ctx.cos, ctx.sin)
+        cache = {
+            "ckv": _ring_write(cache["ckv"], c_kv_new, ctx.lengths, ctx.shard,
+                               ctx.uniform_pos),
+            "krope": _ring_write(cache["krope"], k_rope_new[:, :, 0],
+                                 ctx.lengths, ctx.shard, ctx.uniform_pos),
+        }
+        valid = jnp.minimum(ctx.lengths, cache["ckv"].shape[1])
+        o = mla_mod.mla_decode(p["attn"], h, cfg, ctx.cos, ctx.sin,
+                               (cache["ckv"], cache["krope"]), valid)
+        return x + o, cache
+    kw = {}
+    if ctx.attn_blocks:
+        kw = {"q_block": ctx.attn_blocks[0], "kv_block": ctx.attn_blocks[1]}
+    o, (c_kv, k_rope) = mla_mod.mla_attention(p["attn"], h, cfg,
+                                              ctx.cos, ctx.sin,
+                                              unroll=ctx.unroll,
+                                              shard=ctx.shard, **kw)
+    if ctx.phase == "prefill":
+        cache = {"ckv": _prefill_cache_layout(c_kv, ctx.cache_len),
+                 "krope": _prefill_cache_layout(k_rope, ctx.cache_len)}
+    return x + o, cache
+
+
+def _state_sublayer(kind, p, x, ctx: Ctx, cache):
+    mod = rg_mod if kind == "rec" else ssd_mod
+    key = "rec" if kind == "rec" else "ssd"
+    if ctx.phase == "decode":
+        step = rg_mod.rglru_step if kind == "rec" else ssd_mod.ssd_step
+        o, (h, conv) = step(p[key], x, ctx.cfg, (cache["h"], cache["conv"]))
+        return o, {"h": h, "conv": conv}
+    if kind == "rec":
+        o, (h, conv) = rg_mod.rglru_seq(p[key], x, ctx.cfg)
+    else:
+        o, (h, conv) = ssd_mod.ssd_seq(p[key], x, ctx.cfg, unroll=ctx.unroll)
+    cache = {"h": h, "conv": conv} if ctx.phase == "prefill" else None
+    return o, cache
+
+
+def block_apply(kind: str, p, x, ctx: Ctx, cache):
+    """Apply one block.  Returns (x, cache, aux)."""
+    cfg = ctx.cfg
+    aux = 0.0
+    if kind in ("dense", "moe", "enc"):
+        x, cache = _attn_sublayer(p, x, ctx, cache, window=cfg.window,
+                                  causal=(kind != "enc"))
+        x, aux = _ffn_sublayer(p, x, ctx)
+    elif kind == "attn_local":
+        x, cache = _attn_sublayer(p, x, ctx, cache,
+                                  window=cfg.hybrid.local_window)
+        x, aux = _ffn_sublayer(p, x, ctx)
+    elif kind in ("mla_dense", "mla_moe"):
+        x, cache = _mla_sublayer(p, x, ctx, cache)
+        x, aux = _ffn_sublayer(p, x, ctx)
+    elif kind == "dec":
+        x, self_cache = _attn_sublayer(p, x, ctx,
+                                       None if cache is None else cache.get("self"),
+                                       window=None)
+        x, cross_cache = _cross_sublayer(p, x, ctx,
+                                         None if cache is None else cache.get("cross"))
+        x, aux = _ffn_sublayer(p, x, ctx)
+        cache = None if self_cache is None and cross_cache is None else \
+            {"self": self_cache, "cross": cross_cache}
+    elif kind in ("rec", "ssd"):
+        o, cache = _state_sublayer(kind, p, x, ctx, cache)
+        x = x + o
+        if kind == "rec":  # griffin rec blocks also carry an MLP residual
+            x, aux = _ffn_sublayer(p, x, ctx)
+    else:
+        raise ValueError(kind)
+    x = ctx.shard(x, "act")
+    return x, cache, aux
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+    remat_policy: str = "minimal"   # minimal | dots | off
+    unroll: bool = False            # accounting mode (launch/accounting.py)
+    attn_blocks: Optional[tuple] = None  # (q_block, kv_block) override
+    decode_carry_cache: bool = False  # §Perf: in-place cache via loop carry
+    assume_uniform_decode: bool = False  # §Perf: all requests share position
+    vocab_parallel: bool = False    # §Perf: one-hot embed + sharded logits
+
+    def _ctx(self, **kw) -> Ctx:
+        return Ctx(cfg=self.cfg, unroll=self.unroll,
+                   attn_blocks=self.attn_blocks, **kw)
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, key) -> dict:
+        cfg = self.cfg
+        segs = segments_for(cfg)
+        keys = jax.random.split(key, len(segs) + 2)
+        params: dict[str, Any] = {
+            "embed": cm.embed_init(keys[0], cfg),
+            "final_norm": cm.ones((cfg.d_model,)),
+        }
+        for seg, k in zip(segs, keys[1:]):
+            def init_one(lk):
+                sks = jax.random.split(lk, len(seg.kinds))
+                return {f"sub{i}": _block_init(sk, cfg, kind)
+                        for i, (kind, sk) in enumerate(zip(seg.kinds, sks))}
+            params[seg.name] = jax.vmap(init_one)(
+                jax.random.split(k, seg.count))
+        if cfg.enc_layers:
+            def init_enc(lk):
+                return {"sub0": _block_init(lk, cfg, "enc")}
+            params["enc"] = jax.vmap(init_enc)(
+                jax.random.split(keys[-1], cfg.enc_layers))
+            params["enc_norm"] = cm.ones((cfg.d_model,))
+        return params
+
+    # -- segment scan machinery ---------------------------------------------
+    def _remat(self, fn):
+        if self.remat_policy == "off":
+            return fn
+        if self.remat_policy == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        return jax.checkpoint(fn)
+
+    def _run_segment(self, seg: Segment, seg_params, x, ctx: Ctx,
+                     cache=None):
+        """Scan over a segment's layers.  Returns (x, new_cache, aux_sum)."""
+
+        def body(carry, xs):
+            x, aux = carry
+            p_layer, c_layer = xs
+            new_c = {}
+            for i, kind in enumerate(seg.kinds):
+                ci = None if c_layer is None else c_layer[f"sub{i}"]
+                x, ci, a = block_apply(kind, p_layer[f"sub{i}"], x, ctx, ci)
+                new_c[f"sub{i}"] = ci
+                aux = aux + a
+            if all(v is None for v in new_c.values()):
+                new_c = None
+            return (x, aux), new_c
+
+        body = self._remat(body) if ctx.phase == "train" else body
+
+        if ctx.phase == "decode" and self.decode_carry_cache:
+            # §Perf iteration: the default scan emits the new cache as
+            # stacked ys — a full cache copy per step.  Carrying the cache
+            # through the loop and updating each layer's slice in place
+            # (dynamic_update_slice on the carried buffer, which XLA aliases
+            # across iterations) removes the copy.
+            if self.unroll:
+                aux = jnp.zeros((), jnp.float32)
+                new_cache = cache
+                for i in range(seg.count):
+                    p_i = jax.tree.map(lambda a: a[i], seg_params)
+                    c_i = jax.tree.map(lambda a: a[i], new_cache)
+                    (x, aux), c_new = body((x, aux), (p_i, c_i))
+                    new_cache = jax.tree.map(
+                        lambda full, upd, i=i: full.at[i].set(upd),
+                        new_cache, c_new)
+                return x, new_cache, aux
+
+            def floop(i, carry):
+                x, cch, aux = carry
+                p_i = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, keepdims=False), seg_params)
+                c_i = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, keepdims=False), cch)
+                (x, aux), c_new = body((x, aux), (p_i, c_i))
+                cch = jax.tree.map(
+                    lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                        full, upd.astype(full.dtype), i, 0), cch, c_new)
+                return (x, cch, aux)
+
+            x, caches, aux = jax.lax.fori_loop(
+                0, seg.count, floop,
+                (x, cache, jnp.zeros((), jnp.float32)))
+            return x, caches, aux
+
+        if self.unroll:
+            # accounting mode: Python loop so XLA cost analysis sees every
+            # layer's ops (while-loop bodies are otherwise counted once)
+            carry = (x, jnp.zeros((), jnp.float32))
+            cache_out = []
+            for i in range(seg.count):
+                xs_i = jax.tree.map(lambda a: a[i], (seg_params, cache))
+                carry, c_i = body(carry, xs_i)
+                cache_out.append(c_i)
+            (x, aux) = carry
+            caches = None if cache_out[0] is None else jax.tree.map(
+                lambda *ls: jnp.stack(ls), *cache_out)
+            return x, caches, aux
+        (x, aux), caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (seg_params, cache))
+        return x, caches, aux
+
+    # -- positions / rope ----------------------------------------------------
+    def _angles(self, positions):
+        cfg = self.cfg
+        e = cfg.head_dim
+        if cfg.mla is not None:
+            e = cfg.mla.rope_head_dim
+        return cm.rope_angles(positions, e, cfg.rope_theta,
+                              cfg.mrope_sections)
+
+    def _decode_positions(self, positions):
+        # positions: (B,) index of the new token
+        if self.cfg.mrope_sections is not None:
+            return jnp.broadcast_to(positions[None, :, None],
+                                    (3,) + positions.shape + (1,))
+        return positions[:, None]
+
+    # -- encoder (audio) -----------------------------------------------------
+    def _encode(self, params, frames, ctx_shard: Shard):
+        cfg = self.cfg
+        b, s, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cos, sin = self._angles(pos)
+        ctx = self._ctx(cos=cos, sin=sin, phase="train", shard=ctx_shard)
+        seg = Segment("enc", ("enc",), cfg.enc_layers)
+        x, _, _ = self._run_segment(seg, params["enc"], frames, ctx)
+        return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- train forward -------------------------------------------------------
+    def forward_train(self, params, batch, shard: Shard = _identity):
+        """batch: dict with tokens (B,S) int32, labels (B,S) int32 (-1 = pad),
+        optional positions, vision_embeds, enc_frames."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            pos2d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = (jnp.broadcast_to(pos2d[None], (3, b, s))
+                         if cfg.mrope_sections is not None else pos2d)
+        cos, sin = self._angles(positions)
+
+        x = cm.embed_apply(params["embed"], tokens, cfg,
+                           one_hot_matmul=self.vocab_parallel)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)   # (B, NV, D) stub
+            nv = ve.shape[1]
+            x = jnp.concatenate([ve, x[:, nv:]], axis=1)
+        x = shard(x, "act")
+
+        enc_out = None
+        if cfg.enc_layers:
+            enc_out = self._encode(params, batch["enc_frames"].astype(x.dtype),
+                                   shard)
+        ctx = self._ctx(cos=cos, sin=sin, phase="train", shard=shard,
+                        enc_out=enc_out)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        for seg in segments_for(cfg):
+            x, _, aux = self._run_segment(seg, params[seg.name], x, ctx)
+            aux_total = aux_total + aux
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.unembed_apply(params["embed"], x, cfg,
+                                  shard=shard if self.vocab_parallel else None)
+        return logits, aux_total
+
+    def loss(self, params, batch, shard: Shard = _identity,
+             aux_weight: float = 0.01):
+        logits, aux = self.forward_train(params, batch, shard)
+        labels = batch["labels"]
+        mask = labels >= 0
+        lab = jnp.maximum(labels, 0)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        if self.vocab_parallel:
+            # shard-local gold pick: reduces over the vocab-sharded axis
+            # instead of gathering logits (Megatron vocab-parallel CE)
+            vid = jnp.arange(logits.shape[-1])[None, None, :]
+            gold = jnp.sum(jnp.where(vid == lab[..., None], logits, 0.0), -1)
+        else:
+            gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        ntok = jnp.maximum(mask.sum(), 1)
+        ce = nll.sum() / ntok
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # -- cache construction ---------------------------------------------------
+    def cache_struct(self, batch: int, cache_len: int, enc_len: int = 0):
+        """Abstract cache pytree (ShapeDtypeStructs) for serve_step lowering."""
+        cfg = self.cfg
+        dt = cm.DTYPE
+
+        def sds(shape, dtype=dt):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        def leaf(kind):
+            k, e = cfg.num_kv_heads, cfg.head_dim
+            if kind in ("dense", "moe", "enc", "attn_local"):
+                cl = cache_len
+                if kind == "attn_local":
+                    cl = min(cache_len, cfg.hybrid.local_window)
+                if kind == "moe" and cfg.window:
+                    cl = min(cache_len, max(cfg.window, 1))
+                return {"k": sds((batch, cl, k, e)), "v": sds((batch, cl, k, e))}
+            if kind in ("mla_dense", "mla_moe"):
+                m = cfg.mla
+                return {"ckv": sds((batch, cache_len, m.kv_lora_rank)),
+                        "krope": sds((batch, cache_len, m.rope_head_dim))}
+            if kind == "dec":
+                return {"self": {"k": sds((batch, cache_len, k, e)),
+                                 "v": sds((batch, cache_len, k, e))},
+                        "cross": {"ck": sds((batch, enc_len, k, e)),
+                                  "cv": sds((batch, enc_len, k, e))}}
+            if kind == "rec":
+                dr = cfg.hybrid.d_rnn or cfg.d_model
+                return {"h": sds((batch, dr), jnp.float32),
+                        "conv": sds((batch, cfg.hybrid.conv_width - 1, dr))}
+            if kind == "ssd":
+                s = cfg.ssm
+                d_in = s.expand * cfg.d_model
+                nheads = d_in // s.head_dim
+                gn = s.n_groups * s.d_state
+                w = s.conv_width - 1
+                return {"h": sds((batch, nheads, s.d_state, s.head_dim),
+                                 jnp.float32),
+                        "conv": {"x": sds((batch, w, d_in)),
+                                 "b": sds((batch, w, gn)),
+                                 "c": sds((batch, w, gn))}}
+            raise ValueError(kind)
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), tree)
+
+        return {seg.name: stack({f"sub{i}": leaf(k)
+                                 for i, k in enumerate(seg.kinds)}, seg.count)
+                for seg in segments_for(cfg)}
+
+    def init_cache(self, batch: int, cache_len: int, enc_len: int = 0):
+        structs = self.cache_struct(batch, cache_len, enc_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(self, params, cache, tokens, positions,
+                    shard: Shard = _identity, cache_len: int = 0):
+        """tokens: (B,) int32 new token ids; positions: (B,) their indices.
+        Returns (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        cache_len = cache_len or self._cache_len_from(cache)
+        cos, sin = self._angles(self._decode_positions(positions))
+        x = cm.embed_apply(params["embed"], tokens[:, None], cfg)
+        ctx = self._ctx(cos=cos, sin=sin, phase="decode", shard=shard,
+                        lengths=positions + 1, cache_len=cache_len)
+        if self.assume_uniform_decode:
+            ctx.uniform_pos = positions[0]
+        new_cache = {}
+        for seg in segments_for(cfg):
+            x, new_cache[seg.name], _ = self._run_segment(
+                seg, params[seg.name], x, ctx, cache[seg.name])
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.unembed_apply(params["embed"], x, cfg)
+        return logits[:, 0], new_cache
+
+    def _cache_len_from(self, cache) -> int:
+        for seg in segments_for(self.cfg):
+            sub = cache[seg.name]["sub0"]
+            for key in ("k", "ckv"):
+                if key in sub:
+                    return sub[key].shape[2]
+            if "self" in sub:
+                return sub["self"]["k"].shape[2]
+        # state-space models: no kv length; ring length is irrelevant
+        return 1
+
+    # -- prefill ----------------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int,
+                shard: Shard = _identity):
+        """Full-sequence forward that also returns the populated cache and the
+        last-token logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            pos2d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = (jnp.broadcast_to(pos2d[None], (3, b, s))
+                         if cfg.mrope_sections is not None else pos2d)
+        cos, sin = self._angles(positions)
+        x = cm.embed_apply(params["embed"], tokens, cfg)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+        x = shard(x, "act")
+        enc_out = None
+        if cfg.enc_layers:
+            enc_out = self._encode(params, batch["enc_frames"].astype(x.dtype),
+                                   shard)
+        ctx = self._ctx(cos=cos, sin=sin, phase="prefill", shard=shard,
+                        cache_len=cache_len, enc_out=enc_out)
+        caches = {}
+        for seg in segments_for(cfg):
+            x, caches[seg.name], _ = self._run_segment(
+                seg, params[seg.name], x, ctx)
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.unembed_apply(params["embed"], x[:, -1:], cfg)
+        return logits[:, 0], caches

@@ -1,0 +1,119 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Train/prefill: queries through a low-rank path (q_lora), keys/values through a
+shared compressed latent c_kv (kv_lora_rank=512) plus a decoupled shared RoPE
+key (rope_head_dim=64).  The *cache* stores only (c_kv, k_rope) per token —
+576 numbers instead of 2*H*E = 32768 — which is why DESIGN.md calls MLA pages
+the best-case parked payload.
+
+Decode uses the absorbed formulation: W^UK is folded into the query and W^UV
+into the output so attention runs directly against the latent cache —
+per-token FLOPs O(H * kv_lora) instead of O(H * E * T) re-expansion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": cm.ninit(ks[0], (d, m.q_lora_rank), d ** -0.5),
+        "q_norm": cm.ones((m.q_lora_rank,)),
+        "wq_b": cm.ninit(ks[1], (m.q_lora_rank, h, qd), m.q_lora_rank ** -0.5),
+        "wkv_a": cm.ninit(ks[2], (d, m.kv_lora_rank + m.rope_head_dim),
+                          d ** -0.5),
+        "kv_norm": cm.ones((m.kv_lora_rank,)),
+        "wk_b": cm.ninit(ks[3], (m.kv_lora_rank, h, m.nope_head_dim),
+                         m.kv_lora_rank ** -0.5),
+        "wv_b": cm.ninit(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                         m.kv_lora_rank ** -0.5),
+        "wo": cm.ninit(ks[5], (h, m.v_head_dim, d), (h * m.v_head_dim) ** -0.5),
+    }
+
+
+def mla_latent(p, x, cfg: ModelConfig, cos, sin):
+    """Compress x to the cached latent: (c_kv (B,S,R), k_rope (B,S,1,Er))."""
+    m = cfg.mla
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = cm.rmsnorm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]  # (B,S,1,Er)
+    k_rope = cm.apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_queries(p, x, cfg: ModelConfig, cos, sin):
+    """Return (q_nope (B,S,H,En), q_rope (B,S,H,Er))."""
+    m = cfg.mla
+    cq = cm.rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                    cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["wq_b"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = cm.apply_rope(q[..., m.nope_head_dim:], cos, sin)
+    return q_nope, q_rope
+
+
+def mla_attention(p, x, cfg: ModelConfig, cos, sin, q_block=512,
+                  kv_block=1024, unroll=False, shard=None):
+    """Full-sequence MLA attention (train / prefill).  Returns (out, cache)
+    where cache = (c_kv, k_rope) for the serving layer."""
+    m = cfg.mla
+    h = cfg.num_heads
+    q_nope, q_rope = mla_queries(p, x, cfg, cos, sin)
+    c_kv, k_rope = mla_latent(p, x, cfg, cos, sin)
+    if shard is not None:
+        # sequence-gather the 576-dim latent, not the 24k-dim expansion
+        c_kv = shard(c_kv, "mla_latent")
+        k_rope = shard(k_rope[:, :, 0], "mla_latent")[:, :, None]
+
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)          # (B,S,H,En+Er)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.rope_head_dim,))],
+        axis=-1)
+    if shard is not None:
+        k = shard(k, "kv_heads")
+        v = shard(v, "kv_heads")
+
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, h, 1, -1)
+    if shard is not None:
+        q = shard(q, "q_heads")
+    o = cm.blockwise_attention(
+        q, k, v, causal=True,
+        q_block=q_block, kv_block=kv_block, unroll=unroll)   # (B,S,H,1,Ev)
+    out = jnp.einsum("bshe,hed->bsd", o[:, :, :, 0], p["wo"])
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg: ModelConfig, cos, sin, cache, lengths):
+    """Absorbed single-token decode.  cache = (c_kv (B,T,R), k_rope (B,T,Er)),
+    already updated with the current token at lengths-1."""
+    m = cfg.mla
+    q_nope, q_rope = mla_queries(p, x, cfg, cos, sin)       # (B,1,H,*)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]             # (B,H,*)
+    c_kv, k_rope = cache
+
+    # absorb W^UK: q_lat (B,H,R)
+    q_lat = jnp.einsum("bhe,rhe->bhr", q_nope, p["wk_b"])
+    s_lat = jnp.einsum("bhr,btr->bht", q_lat, c_kv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhe,bte->bht", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = (s_lat + s_rope) * scale
+    t = c_kv.shape[1]
+    mask = jnp.arange(t)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None], s, cm.NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", pattn.astype(c_kv.dtype), c_kv)
+    o = jnp.einsum("bhr,rhe->bhe", o_lat, p["wv_b"])        # absorb W^UV
+    return jnp.einsum("bhe,hed->bd", o, p["wo"])[:, None, :]

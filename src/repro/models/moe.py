@@ -1,0 +1,98 @@
+"""Top-k routed Mixture-of-Experts with dispatch/combine einsums.
+
+Mesh-TensorFlow-style dense dispatch: tokens are processed in groups of
+``group_tokens``; each group builds a (T, X, C) dispatch tensor (X experts,
+C capacity slots) and the expert FFN runs as batched einsums over the expert
+dimension.  Two sharding regimes (DESIGN.md §5):
+
+  * EP   (deepseek-v2, 160 experts): expert dim sharded over "model"; the
+    dispatch einsum's contraction over sharded X lowers to the all-to-all-like
+    collective pattern GSPMD emits for expert parallelism.
+  * TP   (mixtral, 8 experts < mesh axis): experts replicated, expert FFN
+    hidden dim sharded over "model" (megatron-style inside each expert).
+
+The choice is made in distributed/sharding.py from num_experts vs axis size;
+this module is sharding-agnostic.
+
+Router: softmax probabilities, top-k selection, renormalized weights (the
+mixtral convention; deepseek-v2's grouped routing reduces to the same compute
+shape — noted in DESIGN.md).  A switch-style load-balance aux loss is
+returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import common as cm
+
+
+def moe_init(key, cfg: ModelConfig):
+    mo = cfg.moe
+    d, f, x = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": cm.ninit(ks[0], (d, x), d ** -0.5, jnp.float32),
+        "wi": cm.ninit(ks[1], (x, d, f), d ** -0.5),
+        "wg": cm.ninit(ks[2], (x, d, f), d ** -0.5),
+        "wo": cm.ninit(ks[3], (x, f, d), f ** -0.5),
+    }
+    if mo.shared_experts:
+        p["shared"] = cm.mlp_init(ks[4], d, f * mo.shared_experts)
+    return p
+
+
+def _capacity(mo: MoEConfig, group_tokens: int) -> int:
+    c = int(mo.capacity_factor * group_tokens * mo.top_k / mo.num_experts)
+    return max(8, (c + 7) // 8 * 8)  # pad for lane alignment
+
+
+def moe_apply(p, x, cfg: ModelConfig, act: str):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    tg = min(mo.group_tokens, b * s)
+    while (b * s) % tg:  # largest divisor of b*s not exceeding group_tokens
+        tg -= 1
+    g = b * s // tg
+    xt = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,dx->gtx", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,T,X)
+    top_p, top_i = jax.lax.top_k(probs, mo.top_k)               # (G,T,K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    nx = mo.num_experts
+    cap = _capacity(mo, tg)
+    onehot = jax.nn.one_hot(top_i, nx, dtype=jnp.float32)       # (G,T,K,X)
+    # position of each (token, slot) within its expert's arrival order
+    flat = onehot.reshape(g, tg * mo.top_k, nx)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1.0                   # (G,T*K,X)
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(g, tg, mo.top_k, nx),
+        top_i[..., None], axis=-1)[..., 0]                      # (G,T,K)
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                            dtype=jnp.float32) * keep[..., None]
+
+    # dispatch: (G,T,X,C); combine adds router weights
+    dispatch = jnp.einsum("gtkx,gtkc->gtxc", onehot, pos_oh)
+    combine = jnp.einsum("gtkx,gtkc,gtk->gtxc", onehot, pos_oh, top_p)
+
+    xe = jnp.einsum("gtxc,gtd->gxcd", dispatch.astype(x.dtype), xt)
+    hg = jnp.einsum("gxcd,xdf->gxcf", xe, p["wg"])
+    hu = jnp.einsum("gxcd,xdf->gxcf", xe, p["wi"])
+    a = jax.nn.gelu(hg) if act == "gelu" else jax.nn.silu(hg)
+    ye = jnp.einsum("gxcf,xfd->gxcd", a * hu, p["wo"])
+    out = jnp.einsum("gtxc,gxcd->gtd", combine.astype(x.dtype), ye)
+    out = out.reshape(b, s, d)
+
+    if mo.shared_experts:
+        out = out + cm.mlp_apply(p["shared"], x, act)
+
+    # switch-style load-balance loss: X * sum_x f_x * P_x
+    f = jnp.mean(dispatch.sum(axis=-1), axis=(0, 1))            # fraction per X
+    pr = jnp.mean(probs, axis=(0, 1))
+    aux = nx * jnp.sum(f * pr)
+    return out, aux

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrent residual block: x -> (GeLU gate branch) ⊙ (conv1d -> RG-LRU branch)
+-> output projection.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(c * r_t * -softplus(Λ))          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+is linear in h, so the sequence form runs as a single
+``jax.lax.associative_scan`` over (a, b) pairs — O(log S) depth, the
+TPU-friendly formulation of the paper's hardware-aware linear recurrence.
+Gate projections are block-diagonal (num_heads blocks), as in the
+recurrentgemma reference code.  Decode keeps (h, conv window) as state —
+constant-size, which is what makes the hybrid family `long_500k`-capable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+C_FACTOR = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig):
+    hy = cfg.hybrid
+    d = cfg.d_model
+    dr = hy.d_rnn or d
+    nb = cfg.num_heads            # block-diagonal gate blocks
+    bd = dr // nb
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gate": cm.ninit(ks[0], (d, dr), d ** -0.5),     # GeLU branch
+        "w_x": cm.ninit(ks[1], (d, dr), d ** -0.5),        # recurrent branch
+        "conv_w": cm.ninit(ks[2], (hy.conv_width, dr), hy.conv_width ** -0.5),
+        "conv_b": cm.zeros((dr,)),
+        "wa_gate": cm.ninit(ks[3], (nb, bd, bd), bd ** -0.5),
+        "ba_gate": cm.zeros((dr,), jnp.float32),
+        "wx_gate": cm.ninit(ks[4], (nb, bd, bd), bd ** -0.5),
+        "bx_gate": cm.zeros((dr,), jnp.float32),
+        # Λ init so that a^c spans ~(0.9, 0.999) as in the Griffin paper
+        "lam": (jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, dr)) / C_FACTOR))
+            ).astype(jnp.float32),
+        "w_out": cm.ninit(ks[5], (dr, d), dr ** -0.5),
+    }
+
+
+def _block_linear(w, b, x):
+    """Block-diagonal linear: x (B,S,NB,BD) @ w (NB,BD,BD)."""
+    y = jnp.einsum("bsnd,nde->bsne", x, w)
+    return y + b.reshape(1, 1, w.shape[0], -1).astype(y.dtype)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Width-W causal conv over seq.  x: (B,S,D); state: (B,W-1,D) history.
+    Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[width - 1 - i] for i in range(width))
+    return y + b, xp[:, -(width - 1):]
+
+
+def _gates(p, xr, cfg):
+    nb = cfg.num_heads
+    b, s, dr = xr.shape
+    xb = xr.reshape(b, s, nb, dr // nb)
+    r = jax.nn.sigmoid(_block_linear(p["wa_gate"], p["ba_gate"], xb)
+                       ).reshape(b, s, dr).astype(jnp.float32)
+    i = jax.nn.sigmoid(_block_linear(p["wx_gate"], p["bx_gate"], xb)
+                       ).reshape(b, s, dr).astype(jnp.float32)
+    log_a = -C_FACTOR * r * jax.nn.softplus(p["lam"])          # (B,S,Dr) f32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * xr.astype(jnp.float32)
+    return a, gated_x
+
+
+def rglru_seq(p, x, cfg: ModelConfig, conv_state=None, h0=None):
+    """Full-sequence recurrent block.  x: (B,S,D) -> (y, (h_last, conv_state))."""
+    hy = cfg.hybrid
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))
+    xr, conv_state = _causal_conv(
+        jnp.einsum("bsd,de->bse", x, p["w_x"]), p["conv_w"], p["conv_b"],
+        conv_state)
+    a, bterm = _gates(p, xr, cfg)
+    if h0 is not None:
+        # fold carried state into the first step: b_0 += a_0 * h0
+        bterm = bterm.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), (h[:, -1], conv_state)
+
+
+def rglru_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode.  x: (B,1,D); state = (h (B,Dr) f32, conv (B,W-1,Dr))."""
+    h_prev, conv_state = state
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))
+    xr, conv_state = _causal_conv(
+        jnp.einsum("bsd,de->bse", x, p["w_x"]), p["conv_w"], p["conv_b"],
+        conv_state)
+    a, bterm = _gates(p, xr, cfg)
+    h = a[:, 0] * h_prev + bterm[:, 0]                         # (B,Dr)
+    y = (h[:, None].astype(x.dtype) * gate)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), (h, conv_state)

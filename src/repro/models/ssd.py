@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the sequence is processed
+in chunks of Q tokens; within a chunk the quadratic (dual) form computes
+Y_diag with a decay-masked C·Bᵀ score matrix, while a tiny sequential scan
+over chunk states (B, H, N, P) carries information across chunks:
+
+    Y = Y_diag(intra-chunk, matmul-heavy -> MXU)
+      + C_c · h_c (inter-chunk, decayed initial state)
+
+We scan over chunks with ``lax.scan`` so peak memory is one chunk's score
+tile (B, H, Q, Q) rather than the full (S/Q, H, Q, Q) stack.  Decode carries
+(conv windows, state (B,H,N,P)) — constant-size, hence `long_500k`-capable.
+
+Projections are split per component (z / x / B / C / dt) instead of one fused
+in_proj so tensor-parallel sharding is clean: z, x and dt shard over heads
+("model" axis) and the per-head SSD scan runs fully head-parallel — the SSM
+analogue of megatron attention-head sharding (DESIGN.md §5).  B and C are
+group-shared (n_groups=1) and stay replicated.
+
+Single group (n_groups=1): B and C are shared across heads, as in the
+mamba2-1.3b config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def ssd_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": cm.ninit(ks[0], (d, d_in), d ** -0.5),
+        "w_x": cm.ninit(ks[1], (d, d_in), d ** -0.5),
+        "w_b": cm.ninit(ks[2], (d, gn), d ** -0.5),
+        "w_c": cm.ninit(ks[3], (d, gn), d ** -0.5),
+        "w_dt": cm.ninit(ks[4], (d, nheads), d ** -0.5),
+        "conv_x": cm.ninit(ks[5], (s.conv_width, d_in), s.conv_width ** -0.5),
+        "conv_x_b": cm.zeros((d_in,)),
+        "conv_b": cm.ninit(ks[6], (s.conv_width, gn), s.conv_width ** -0.5),
+        "conv_b_b": cm.zeros((gn,)),
+        "conv_c": cm.ninit(ks[7], (s.conv_width, gn), s.conv_width ** -0.5),
+        "conv_c_b": cm.zeros((gn,)),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm": cm.ones((d_in,)),
+        "out_proj": cm.ninit(ks[0], (d_in, d), d_in ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv + SiLU.  x: (B,S,C); state: (B,W-1,C)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[width - 1 - i] for i in range(width))
+    return jax.nn.silu(y + b), xp[:, -(width - 1):]
+
+
+def _project(p, x, cfg: ModelConfig, conv_state):
+    """Shared projection path.  Returns (z, xh, bmat, cmat, dt, conv_state)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    cs = conv_state or {}
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xs, cx = _causal_conv(jnp.einsum("bsd,de->bse", x, p["w_x"]),
+                          p["conv_x"], p["conv_x_b"], cs.get("x"))
+    bmat, cb = _causal_conv(jnp.einsum("bsd,dn->bsn", x, p["w_b"]),
+                            p["conv_b"], p["conv_b_b"], cs.get("b"))
+    cmat, cc = _causal_conv(jnp.einsum("bsd,dn->bsn", x, p["w_c"]),
+                            p["conv_c"], p["conv_c_b"], cs.get("c"))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    bsz, slen = x.shape[:2]
+    xh = xs.reshape(bsz, slen, nheads, s.head_dim)
+    return z, xh, bmat, cmat, dt, {"x": cx, "b": cb, "c": cc}
+
+
+def ssd_seq(p, x, cfg: ModelConfig, conv_state=None, h0=None, unroll=False):
+    """Full-sequence SSD.  x: (B,S,D) -> (y (B,S,D), (h_last, conv_state)).
+    ``unroll=True``: Python loop over chunks (dry-run accounting pass)."""
+    s = cfg.ssm
+    bsz, slen0, _ = x.shape
+    q = min(s.chunk, slen0)
+    pad = (-slen0) % q
+    if pad:
+        # Right-pad to a chunk multiple; padded steps only decay the carried
+        # state, so outputs for real positions are exact (causal).  Callers
+        # that keep the state (prefill) always use chunk-aligned lengths.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    slen = slen0 + pad
+    nc = slen // q
+
+    z, xh, bmat, cmat, dt, conv_state = _project(p, x, cfg, conv_state)
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    hdim = s.head_dim
+    xh = xh.astype(jnp.float32)
+    bmat = bmat.reshape(bsz, slen, s.d_state).astype(jnp.float32)   # G=1
+    cmat = cmat.reshape(bsz, slen, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    da = dt * a                                                     # (B,S,H)
+    xdt = xh * dt[..., None]                                        # (B,S,H,P)
+
+    # chunked layout
+    dac = da.reshape(bsz, nc, q, nheads)
+    xc = xdt.reshape(bsz, nc, q, nheads, hdim)
+    bc = bmat.reshape(bsz, nc, q, s.d_state)
+    cc = cmat.reshape(bsz, nc, q, s.d_state)
+    cums = jnp.cumsum(dac, axis=2)                                  # (B,C,Q,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nheads, s.d_state, hdim), jnp.float32)
+
+    def chunk_step(h, inputs):
+        cums_c, xc_c, bc_c, cc_c = inputs
+        # intra-chunk decay mask: L[q1,q2] = exp(cums[q1]-cums[q2]), q1>=q2.
+        # Mask BEFORE exp: above-diagonal entries are positive and overflow,
+        # and where(mask, inf, 0) still propagates NaN gradients.
+        seg = cums_c[:, :, None, :] - cums_c[:, None, :, :]         # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        l_mask = jnp.exp(jnp.where(tri[None, :, :, None], seg, -1e30))
+        scores = jnp.einsum("bqn,bkn->bqk", cc_c, bc_c)             # (B,Q,Q)
+        y_diag = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, l_mask, xc_c)
+        # contribution of the carried state
+        decay_in = jnp.exp(cums_c)                                  # (B,Q,H)
+        y_off = jnp.einsum("bqn,bhnp,bqh->bqhp", cc_c, h, decay_in)
+        # state update: h' = decay_all * h + sum_k B_k ⊗ x_k decay_to_end
+        decay_all = jnp.exp(cums_c[:, -1])                          # (B,H)
+        decay_out = jnp.exp(cums_c[:, -1:, :] - cums_c)             # (B,Q,H)
+        states = jnp.einsum("bkn,bkh,bkhp->bhnp", bc_c, decay_out, xc_c)
+        h_new = decay_all[:, :, None, None] * h + states
+        return h_new, y_diag + y_off
+
+    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    if unroll:
+        h_last = h0
+        ys = []
+        for c in range(nc):
+            h_last, yo = chunk_step(
+                h_last, (cums[:, c], xc[:, c], bc[:, c], cc[:, c]))
+            ys.append(yo)
+        yc = jnp.stack(ys)
+    else:
+        h_last, yc = jax.lax.scan(
+            chunk_step, h0, (swap(cums), swap(xc), swap(bc), swap(cc)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, slen, nheads, hdim)
+    y = y + p["d_skip"][:, None] * xh                               # D skip
+    y = y.reshape(bsz, slen, d_in).astype(x.dtype)
+    y = cm.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)     # gated norm
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if pad:
+        out = out[:, :-pad]
+    return out, (h_last, conv_state)
+
+
+def ssd_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode.  x: (B,1,D); state = (h (B,H,N,P) f32, conv)."""
+    s = cfg.ssm
+    h_prev, conv_state = state
+    z, xh, bmat, cmat, dt, conv_state = _project(p, x, cfg, conv_state)
+    d_in = s.expand * cfg.d_model
+    xh = xh[:, 0].astype(jnp.float32)                               # (B,H,P)
+    bv = bmat[:, 0].astype(jnp.float32)                             # (B,N)
+    cv = cmat[:, 0].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a)                                        # (B,H)
+    h = decay[:, :, None, None] * h_prev + jnp.einsum(
+        "bn,bh,bhp->bhnp", bv, dtv, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cv, h) + p["d_skip"][:, None] * xh
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    y = cm.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (h, conv_state)

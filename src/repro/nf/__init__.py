@@ -1,0 +1,1 @@
+"""Shallow network functions (paper §6.1): header-only packet processing."""

@@ -1,0 +1,57 @@
+"""NF chain composition (paper §1: "NFs are often connected together in an NF
+chain, such as FW-NAT") and the Explicit-Drop integration point (§6.2.4).
+
+A chain is an ordered list of NFs; each NF is a pure function
+``(state, pkts) -> (state, pkts, drop_mask, cycles)`` touching only headers.
+``run`` threads the states, ORs the drop masks and sums the per-packet cycle
+costs (used by the analytic performance model, switchsim.perfmodel).
+
+``to_explicit_drops`` models the paper's 50-line OpenNetVM change: packets the
+chain dropped, whose payload is parked (ENB=1), are turned into truncated
+OP=drop notifications sent back to the switch so Merge can free the slot
+immediately instead of waiting for expiry-based eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.packet import OP_DROP, PacketBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    nfs: tuple  # sequence of NF dataclasses (Firewall, Nat, MaglevLB, MacSwap)
+
+    def init_state(self) -> tuple:
+        return tuple(nf.init_state() for nf in self.nfs)
+
+    def run(self, states: tuple, pkts: PacketBatch):
+        """Returns (new_states, pkts_out, dropped_by_chain, total_cycles)."""
+        dropped = jnp.zeros_like(pkts.alive)
+        total_cycles = 0.0
+        new_states = []
+        for nf, st in zip(self.nfs, states):
+            st, pkts, drop, cycles = nf(st, pkts)
+            dropped = dropped | drop
+            total_cycles += cycles
+            new_states.append(st)
+        return tuple(new_states), pkts, dropped, total_cycles
+
+
+def to_explicit_drops(pkts: PacketBatch, dropped) -> PacketBatch:
+    """Convert chain-dropped, parked packets into OP=drop notifications.
+
+    Mirrors the paper §6.2.4: "The NF framework marks an incoming packet as
+    dropped by changing the opcode, truncating the packet payload, and sending
+    the resulting packet back to the switch."
+    """
+    notify = dropped & pkts.pp_valid & (pkts.pp_enb == 1)
+    return pkts.replace(
+        alive=pkts.alive | notify,           # resurrect as a notification
+        payload_len=jnp.where(notify, 0, pkts.payload_len),
+        payload=jnp.where(notify[:, None], 0, pkts.payload),
+        pp_op=jnp.where(notify, OP_DROP, pkts.pp_op),
+    )

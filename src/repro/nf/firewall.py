@@ -1,0 +1,42 @@
+"""Firewall NF: linear probe through a blocked-IP Access Control List.
+
+Paper §6.1: "The firewall linearly probes through a list of blocked IP
+addresses. The firewall in the three-NF chain has 20 rules, and the two-NF
+chain has a single rule in its firewall."  §6.2.4 varies the proportion of
+blocked addresses to control the drop rate.
+
+Header-only by construction: reads ``src_ip`` exclusively.  The batched
+rule-match is also available as a Pallas kernel (repro.kernels.acl_match).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packet import PacketBatch
+
+# Rough per-rule linear-probe cost in CPU cycles, calibrated so a 20-rule
+# firewall lands near the paper's NF-Light..Medium band (§6.3.3).
+CYCLES_PER_RULE = 6.0
+CYCLES_BASE = 40.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Firewall:
+    """Stateless ACL firewall; ``rules`` is a tuple of blocked src IPs."""
+
+    rules: tuple[int, ...]
+
+    def init_state(self):
+        return jnp.asarray(list(self.rules), jnp.int32).reshape(-1)
+
+    def __call__(self, state, pkts: PacketBatch):
+        rules = state  # (R,) int32
+        # Linear probe: compare every packet against every rule.
+        blocked = jnp.any(pkts.src_ip[:, None] == rules[None, :], axis=1)
+        drop = pkts.alive & blocked
+        out = pkts.replace(alive=pkts.alive & ~blocked)
+        cycles = CYCLES_BASE + CYCLES_PER_RULE * rules.shape[0]
+        return state, out, drop, cycles

@@ -1,0 +1,34 @@
+"""MAC address swapper NF with a tunable busy-loop cost knob.
+
+Paper §6.1/§6.3.3: "To create NFs of varying computational cost, we take a MAC
+address swapper and add a busy loop" — NF-Light/Medium/Heavy are ~50/300/570
+average CPU cycles per packet.  The busy loop affects only the analytic
+performance model (cycles), not the functional transform.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.packet import PacketBatch
+
+NF_LIGHT = 50.0
+NF_MEDIUM = 300.0
+NF_HEAVY = 570.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MacSwap:
+    cycles: float = NF_LIGHT
+
+    def init_state(self):
+        return ()
+
+    def __call__(self, state, pkts: PacketBatch):
+        out = pkts.replace(
+            dst_mac=jnp.where(pkts.alive, pkts.src_mac, pkts.dst_mac),
+            src_mac=jnp.where(pkts.alive, pkts.dst_mac, pkts.src_mac),
+        )
+        drop = jnp.zeros_like(pkts.alive)
+        return state, out, drop, self.cycles

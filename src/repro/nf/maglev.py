@@ -1,0 +1,73 @@
+"""Maglev L4 load balancer NF (paper §6.1, based on Eisenbud et al. NSDI'16).
+
+Builds the Maglev consistent-hashing lookup table at configuration time (the
+permutation fill is inherently sequential and runs once, in numpy), then
+performs vectorized per-packet backend selection: hash the 5-tuple, index the
+lookup table, rewrite ``dst_ip`` to the chosen backend VIP target.  The
+per-packet selection is also available as a Pallas kernel
+(repro.kernels.maglev) since it is the LB's only per-packet hot spot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.packet import PacketBatch
+
+CYCLES = 120.0  # hash + table lookup + rewrite
+
+
+def build_table(backends: tuple[int, ...], table_size: int) -> np.ndarray:
+    """Maglev population: each backend fills preferred slots by (offset, skip)."""
+    n = len(backends)
+    offset = np.array([hash(("o", b)) % table_size for b in backends])
+    skip = np.array([hash(("s", b)) % (table_size - 1) + 1 for b in backends])
+    entry = np.full(table_size, -1, np.int32)
+    nxt = np.zeros(n, np.int64)
+    filled = 0
+    while filled < table_size:
+        for i in range(n):
+            c = (offset[i] + nxt[i] * skip[i]) % table_size
+            while entry[c] >= 0:
+                nxt[i] += 1
+                c = (offset[i] + nxt[i] * skip[i]) % table_size
+            entry[c] = i
+            nxt[i] += 1
+            filled += 1
+            if filled == table_size:
+                break
+    return entry
+
+
+def _hash5(src_ip, dst_ip, src_port, dst_port, proto):
+    """int32 5-tuple hash (wraps like uint32); mirrored bit-exactly by the
+    Pallas kernel in repro.kernels.maglev."""
+    h = src_ip.astype(jnp.int32)
+    for v in (dst_ip, src_port, dst_port, proto):
+        h = h * jnp.int32(1000003) ^ v.astype(jnp.int32)
+    return h & jnp.int32(0x7FFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaglevLB:
+    backends: tuple[int, ...] = tuple(0x0A000100 + i for i in range(8))
+    table_size: int = 251  # small prime; Maglev paper uses 65537 in prod
+
+    def init_state(self):
+        return dict(
+            table=jnp.asarray(build_table(self.backends, self.table_size)),
+            backend_ips=jnp.asarray(list(self.backends), jnp.int32),
+        )
+
+    def __call__(self, state, pkts: PacketBatch):
+        h = _hash5(pkts.src_ip, pkts.dst_ip, pkts.src_port, pkts.dst_port,
+                   pkts.proto)
+        idx = (h % self.table_size).astype(jnp.int32)
+        backend = state["table"][idx]
+        new_dst = state["backend_ips"][backend]
+        out = pkts.replace(
+            dst_ip=jnp.where(pkts.alive, new_dst, pkts.dst_ip))
+        drop = jnp.zeros_like(pkts.alive)
+        return state, out, drop, CYCLES

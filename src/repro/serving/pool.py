@@ -1,0 +1,126 @@
+"""Paged-KV allocator = the PayloadPark lookup table at page granularity.
+
+The paper's metadata-table machinery (DESIGN.md §2b), re-instantiated for LM
+serving: a KV-cache *page* is the parked payload; the compact request header
+(page ids + generations + position + last token) is what travels between the
+router and the model shards.  Mapping:
+
+  paper                         serving pool
+  -----                         ------------
+  Split stores 160B payload     admit/extend allocates a page
+  circular TI + single probe    same (alloc scan, one probe per page)
+  EXP expiry decrement          same (abandoned requests' pages reclaimed)
+  generation (CLK) check        validate() before every attention gather
+  Merge frees the slot          release() on request completion
+  Explicit Drop (OP bit)        release() on client cancel — immediate
+  premature-eviction counter    same (request must restart)
+  ENB=0 fallback                alloc failure -> request queued, not parked
+
+The allocator state is tiny (3 int32 vectors) and lives on every shard that
+owns pages; all bulk KV stays put — only headers cross the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counters as C
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    num_pages: int
+    page_tokens: int = 128
+    max_exp: int = 2
+    max_clk: int = 1 << 16
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PoolState:
+    tbl_idx: jax.Array   # () int32
+    clk: jax.Array       # () int32
+    meta_exp: jax.Array  # (M,) int32
+    meta_clk: jax.Array  # (M,) int32 — generation, 0 = free
+    counters: jax.Array  # (C.NUM,) int32 (the paper's counter set)
+
+
+def init_pool(cfg: PoolConfig) -> PoolState:
+    m = cfg.num_pages
+    return PoolState(
+        tbl_idx=jnp.zeros((), jnp.int32),
+        clk=jnp.zeros((), jnp.int32),
+        meta_exp=jnp.zeros((m,), jnp.int32),
+        meta_clk=jnp.zeros((m,), jnp.int32),
+        counters=C.zeros(),
+    )
+
+
+def alloc(cfg: PoolConfig, state: PoolState, want: jax.Array):
+    """Allocate pages for a batch (Split).  ``want``: (B,) bool — which
+    requests need a new page this step.  Single-probe circular allocation
+    with expiry-decrement eviction, exactly Alg. 1 stages 1-2.
+
+    Returns (state, page_ids (B,), gens (B,), ok (B,))."""
+    m = cfg.num_pages
+
+    def step(carry, w):
+        ti, clk, exp_tbl, clk_tbl = carry
+        ti_n = jnp.where(w, (ti + 1) % m, ti)
+        clk_n = jnp.where(w, clk + 1, clk)
+        clk_n = jnp.where(clk_n >= cfg.max_clk, 1, clk_n)
+        exp_pre = exp_tbl[ti_n]
+        exp_dec = jnp.where(exp_pre >= 1, exp_pre - 1, exp_pre)
+        evicted = w & (exp_pre >= 1) & (exp_dec == 0)
+        claim = w & (exp_dec == 0)
+        new_exp = jnp.where(claim, cfg.max_exp, exp_dec)
+        exp_tbl = jnp.where(w, exp_tbl.at[ti_n].set(new_exp), exp_tbl)
+        clk_tbl = jnp.where(
+            claim, clk_tbl.at[ti_n].set(clk_n),
+            jnp.where(evicted, clk_tbl.at[ti_n].set(0), clk_tbl))
+        out = (jnp.where(claim, ti_n, -1), jnp.where(claim, clk_n, 0),
+               claim, evicted, w & ~claim)
+        return (ti_n, clk_n, exp_tbl, clk_tbl), out
+
+    carry0 = (state.tbl_idx, state.clk, state.meta_exp, state.meta_clk)
+    (ti, clk, exp_tbl, clk_tbl), (pages, gens, ok, evicted, failed) = \
+        jax.lax.scan(step, carry0, want)
+
+    counters = state.counters
+    counters = C.bump(counters, "splits", jnp.sum(ok))
+    counters = C.bump(counters, "evictions", jnp.sum(evicted))
+    counters = C.bump(counters, "skip_occupied", jnp.sum(failed))
+    return (PoolState(ti, clk, exp_tbl, clk_tbl, counters),
+            pages, gens, ok)
+
+
+def validate(state: PoolState, pages, gens):
+    """Generation check (Merge stage 2) for every page a request claims to
+    own.  pages/gens: (..., P) with -1 padding.  Returns (...,) bool all-ok."""
+    live = pages >= 0
+    got = state.meta_clk[jnp.maximum(pages, 0)]
+    ok = jnp.where(live, got == gens, True)
+    return jnp.all(ok, axis=-1)
+
+
+def release(cfg: PoolConfig, state: PoolState, pages, gens, explicit=False):
+    """Free pages (Merge / Explicit Drop).  pages/gens: flat (N,) with -1
+    padding.  Stale (already-evicted) pages are counted, not freed twice."""
+    live = pages >= 0
+    idx = jnp.maximum(pages, 0)
+    match = live & (state.meta_clk[idx] == gens)
+    rows = jnp.where(match, idx, cfg.num_pages)
+    meta_exp = state.meta_exp.at[rows].set(0, mode="drop")
+    meta_clk = state.meta_clk.at[rows].set(0, mode="drop")
+    counters = state.counters
+    name = "explicit_drops" if explicit else "merges"
+    counters = C.bump(counters, name, jnp.sum(match))
+    counters = C.bump(counters, "premature_evictions",
+                      jnp.sum(live & ~match))
+    return PoolState(state.tbl_idx, state.clk, meta_exp, meta_clk, counters)
+
+
+def occupancy(state: PoolState):
+    return jnp.sum(state.meta_exp > 0)

@@ -1,0 +1,1 @@
+"""Switch + NF-server performance simulation (paper §6 methodology)."""

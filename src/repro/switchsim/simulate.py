@@ -1,0 +1,102 @@
+"""Event-driven pipeline simulation running the *real* core state machine.
+
+The analytic model (perfmodel.py) predicts rates; this module validates the
+*stateful* behaviour — eviction dynamics, premature-eviction onset, Explicit
+Drop reclamation, functional equivalence — by streaming packets through the
+actual ``core.park`` Split/Merge implementation with a configurable in-flight
+window, the simulated analogue of the paper's split->merge time-delta
+(~30 us, §4).
+
+Timeline model: packets are processed in chunks (the switch interleaves Split
+and Merge traffic); chunk ``t`` is split at step ``t`` and its NF-chain output
+returns for merging at step ``t + window`` — i.e. ``window * chunk`` packets
+are in flight, exactly the quantity that pressures the lookup table
+(M * EXP >= in_flight for eviction-free operation, §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counters as C
+from repro.core.packet import PacketBatch
+from repro.core.park import ParkConfig, ParkState, init_state, merge, split
+from repro.nf.chain import Chain, to_explicit_drops
+
+
+@dataclasses.dataclass
+class SimResult:
+    merged: list            # list[PacketBatch] in arrival order
+    state: ParkState
+    sent_to_server: list    # list[PacketBatch] (post-split, pre-NF)
+    counters: dict
+    srv_bytes: int          # total bytes switch->server (goodput accounting)
+    wire_bytes: int         # total bytes generator->switch
+
+
+def _chunks(pkts: PacketBatch, chunk: int):
+    n = pkts.batch_size
+    assert n % chunk == 0, (n, chunk)
+    return [
+        jax.tree.map(lambda a: a[i: i + chunk], pkts)
+        for i in range(0, n, chunk)
+    ]
+
+
+def simulate(
+    cfg: ParkConfig,
+    chain: Chain,
+    pkts: PacketBatch,
+    window: int = 1,
+    chunk: int = 256,
+    explicit_drops: bool = False,
+    use_kernel: bool = False,
+) -> SimResult:
+    """Stream ``pkts`` through split -> NF chain -> merge with ``window``
+    chunks in flight.  Returns every merged chunk plus final switch state."""
+    state = init_state(cfg)
+    chain_states = chain.init_state()
+    inflight: list = []
+    merged: list = []
+    sent: list = []
+    srv_bytes = 0
+    wire_bytes = 0
+
+    todo = _chunks(pkts, chunk)
+    steps = len(todo) + window
+    for t in range(steps):
+        if t < len(todo):
+            cin = todo[t]
+            wire_bytes += int(jnp.sum(jnp.where(cin.alive, cin.pkt_len(), 0)))
+            state, out = split(cfg, state, cin, use_kernel=use_kernel)
+            sent.append(out)
+            srv_bytes += int(jnp.sum(jnp.where(out.alive, out.pkt_len(), 0)))
+            chain_states, nf_out, dropped, _cycles = chain.run(chain_states, out)
+            if explicit_drops:
+                nf_out = to_explicit_drops(nf_out, dropped)
+            inflight.append(nf_out)
+        if t >= window and (t - window) < len(inflight):
+            returning = inflight[t - window]
+            srv_bytes += int(
+                jnp.sum(jnp.where(returning.alive, returning.pkt_len(), 0)))
+            state, m = merge(cfg, state, returning, use_kernel=use_kernel)
+            merged.append(m)
+
+    return SimResult(
+        merged=merged,
+        state=state,
+        sent_to_server=sent,
+        counters=C.as_dict(state.counters),
+        srv_bytes=srv_bytes,
+        wire_bytes=wire_bytes,
+    )
+
+
+def baseline_roundtrip(chain: Chain, pkts: PacketBatch):
+    """Non-PayloadPark reference: packets travel whole through the chain."""
+    chain_states = chain.init_state()
+    _, out, dropped, cycles = chain.run(chain_states, pkts)
+    return out, dropped, cycles

@@ -1,0 +1,1 @@
+"""Traffic generation: PktGen-style UDP workloads (paper §6.1)."""

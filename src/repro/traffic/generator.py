@@ -1,0 +1,58 @@
+"""Workload generation mirroring the paper's PktGen setup (§6.1, Fig. 6).
+
+Two workload families:
+  * ``fixed(size)`` — fixed-size UDP packets (256..1492 B sweeps, Figs. 8/9/15/16)
+  * ``enterprise()`` — bimodal packet-size distribution reproducing Benson et
+    al. [IMC'10] enterprise-datacenter traffic as digitized from the paper's
+    Fig. 6: ~30 % of packets carry payloads under 160 B (not splittable) and
+    the mean packet size is ~882 B.
+
+Packet sizes are total on-wire bytes including the 42-byte header.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packet import HDR_BYTES, PacketBatch, make_udp_batch
+
+# Digitized bimodal enterprise distribution (paper Fig. 6).  30 % of packets
+# are below 202 B total (payload < 160 B -> ENB=0), mean ~= 882 B.
+ENTERPRISE_SIZES = np.array([64, 128, 190, 512, 1024, 1492], np.int32)
+ENTERPRISE_PROBS = np.array([0.10, 0.12, 0.08, 0.12, 0.18, 0.40])
+ENTERPRISE_MEAN = float((ENTERPRISE_SIZES * ENTERPRISE_PROBS).sum())  # ~879.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    sizes: np.ndarray   # candidate total packet sizes (bytes)
+    probs: np.ndarray   # selection probabilities
+
+    @property
+    def mean_pkt_bytes(self) -> float:
+        return float((self.sizes * self.probs).sum())
+
+    def sample_sizes(self, key: jax.Array, n: int) -> jax.Array:
+        idx = jax.random.choice(
+            key, self.sizes.shape[0], (n,), p=jnp.asarray(self.probs))
+        return jnp.asarray(self.sizes)[idx]
+
+    def make_batch(self, key: jax.Array, n: int, pmax: int = 2048,
+                   **field_overrides) -> PacketBatch:
+        k1, k2 = jax.random.split(key)
+        sizes = self.sample_sizes(k1, n)
+        return make_udp_batch(k2, n, sizes, pmax=pmax, **field_overrides)
+
+
+def fixed(size: int) -> Workload:
+    assert size >= HDR_BYTES
+    return Workload(f"fixed{size}", np.array([size], np.int32),
+                    np.array([1.0]))
+
+
+def enterprise() -> Workload:
+    return Workload("enterprise", ENTERPRISE_SIZES, ENTERPRISE_PROBS)

@@ -1,0 +1,78 @@
+"""The jit-compiled training step: loss -> grad -> (optional compression)
+-> AdamW.  This is what launch/dryrun.py lowers for ``train_4k`` cells and
+what launch/train.py executes."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM, Shard, _identity
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatch: int = 0           # 0 = no gradient accumulation
+    compress_grads: bool = False  # int8 error-feedback DP all-reduce
+
+
+def init_train_state(lm: LM, key) -> dict:
+    params = lm.init_params(key)
+    return {"params": params, "opt": opt.init_opt_state(params)}
+
+
+def train_step(lm: LM, tcfg: TrainConfig, state: dict, batch: dict,
+               shard: Shard = _identity,
+               grad_transform: Optional[Callable] = None):
+    """One optimizer step.  ``grad_transform`` hooks gradient compression
+    (training/compression.py) between backprop and AdamW."""
+
+    b = batch["tokens"].shape[0]
+
+    def loss_fn(params, bslice):
+        loss, metrics = lm.loss(params, bslice, shard)
+        return loss, metrics
+
+    def slice_batch(i, mb):
+        def sl(a):
+            axis = 1 if (a.ndim >= 2 and a.shape[0] == 3
+                         and a.shape[1] == b) else 0
+            return jax.lax.dynamic_slice_in_dim(a, i * mb, mb, axis=axis)
+        return jax.tree.map(sl, batch)
+
+    if tcfg.microbatch and tcfg.microbatch < b:
+        # gradient accumulation over microbatches (sequential, memory-lean)
+        mb = tcfg.microbatch
+        assert b % mb == 0, (b, mb)
+        n = b // mb
+
+        def one(i, acc):
+            grads_acc, loss_acc = acc
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], slice_batch(i, mb))
+            grads_acc = jax.tree.map(
+                lambda ga, gi: ga + gi.astype(jnp.float32), grads_acc, g)
+            return grads_acc, loss_acc + loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state["params"])
+        grads, loss = jax.lax.fori_loop(0, n, one, (zeros, jnp.zeros(())))
+        grads = jax.tree.map(lambda g: g / n, grads)
+        loss = loss / n
+        metrics = {"ce": loss, "aux": jnp.zeros(())}
+    else:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+
+    if grad_transform is not None:
+        grads = grad_transform(grads)
+
+    params, opt_state, opt_metrics = opt.apply_updates(
+        tcfg.adamw, state["params"], state["opt"], grads)
+    metrics = dict(metrics, **opt_metrics, loss=loss)
+    return {"params": params, "opt": opt_state}, metrics

@@ -1,0 +1,78 @@
+"""Prefill+decode must agree with the full forward pass — the cache/ring/
+rope invariant, per architecture family.  MoE archs use a raised capacity
+factor: expert-capacity token dropping legitimately depends on batch
+composition (Switch-style dropping), so exactness requires no drops."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.reduced import reduced
+from repro.models.lm import LM
+
+B, S = 2, 33  # prefill 32 + 1 decode
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", configs.names())
+def test_prefill_decode_matches_forward(arch):
+    cfg = _nodrop(reduced(configs.get(arch)))
+    lm = LM(cfg, remat_policy="off")
+    params = lm.init_params(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    batch_full = {"tokens": toks}
+    batch_pre = {"tokens": toks[:, :-1]}
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S)[None, None],
+                               (3, B, S)).astype(jnp.int32)
+        batch_full["positions"] = pos
+        batch_pre["positions"] = pos[:, :, :-1]
+        ve = 0.02 * jax.random.normal(jax.random.key(2),
+                                      (B, 8, cfg.d_model)).astype(jnp.bfloat16)
+        batch_full["vision_embeds"] = ve
+        batch_pre["vision_embeds"] = ve
+    if cfg.enc_layers:
+        fr = 0.1 * jax.random.normal(jax.random.key(3),
+                                     (B, 32, cfg.d_model)).astype(jnp.bfloat16)
+        batch_full["enc_frames"] = fr
+        batch_pre["enc_frames"] = fr
+    logits_full, _ = lm.forward_train(params, batch_full)
+    want = logits_full[:, -1].astype(jnp.float32)
+    _, cache = lm.prefill(params, batch_pre, cache_len=40)
+    got, _ = lm.decode_step(params, cache, toks[:, -1],
+                            jnp.full((B,), S - 1, jnp.int32))
+    got = got.astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(got - want))) \
+        / max(float(jnp.max(jnp.abs(want))), 1e-6)
+    assert rel < 0.06, rel
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "recurrentgemma-9b"])
+def test_ring_buffer_window_decode(arch):
+    """Windowed archs: decoding far past the window with a ring cache must
+    agree with the full forward (the ring IS the window)."""
+    cfg = _nodrop(reduced(configs.get(arch)))
+    lm = LM(cfg, remat_policy="off")
+    params = lm.init_params(jax.random.key(0))
+    total = 48  # window is 16 -> ring wraps 3x
+    toks = jax.random.randint(jax.random.key(4), (B, total), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+    logits_full, _ = lm.forward_train(params, {"tokens": toks})
+    _, cache = lm.prefill(params, {"tokens": toks[:, :32]}, cache_len=40)
+    got = None
+    for i in range(32, total):
+        got, cache = lm.decode_step(params, cache, toks[:, i],
+                                    jnp.full((B,), i, jnp.int32))
+    want = logits_full[:, -1].astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want))) \
+        / max(float(jnp.max(jnp.abs(want))), 1e-6)
+    assert rel < 0.08, rel

@@ -1,0 +1,132 @@
+"""Per-arch reduced-config smoke tests: instantiate the same family at tiny
+dimensions and run one forward/train/decode step on CPU, asserting output
+shapes and no NaNs (assignment brief requirement)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.reduced import reduced
+from repro.configs.shapes import SHAPES, applicable
+from repro.models.lm import LM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, train_step
+
+B, S = 2, 32
+ARCHS = configs.names()
+
+
+def batch_for(cfg, key, s=S):
+    b = {
+        "tokens": jax.random.randint(key, (B, s), 0, cfg.vocab_size,
+                                     dtype=jnp.int32),
+        "labels": jax.random.randint(jax.random.key(99), (B, s), 0,
+                                     cfg.vocab_size, dtype=jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None], (3, B, s)).astype(jnp.int32)
+        b["vision_embeds"] = 0.01 * jax.random.normal(
+            jax.random.key(5), (B, 8, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.enc_layers:
+        b["enc_frames"] = 0.1 * jax.random.normal(
+            jax.random.key(6), (B, s, cfg.d_model)).astype(jnp.bfloat16)
+    return b
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced(configs.get(name))
+            lm = LM(cfg)
+            cache[name] = (lm, lm.init_params(jax.random.key(0)))
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(models, arch):
+    lm, params = models(arch)
+    cfg = lm.cfg
+    logits, aux = lm.forward_train(params, batch_for(cfg, jax.random.key(1)))
+    assert logits.shape == (B, S, cfg.vocab_padded())
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(models, arch):
+    lm, _ = models(arch)
+    state = init_train_state(lm, jax.random.key(0))
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-3, warmup_steps=1,
+                                         total_steps=10))
+    batch = batch_for(lm.cfg, jax.random.key(2))
+    new_state, metrics = train_step(lm, tcfg, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    moved = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), state["params"],
+        new_state["params"])
+    assert any(jax.tree.leaves(moved))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_step(models, arch):
+    lm, params = models(arch)
+    cfg = lm.cfg
+    batch = batch_for(cfg, jax.random.key(3))
+    del batch["labels"]
+    logits, cache = lm.prefill(params, batch, cache_len=S + 4)
+    assert logits.shape == (B, cfg.vocab_padded())
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out, cache2 = lm.decode_step(params, cache, tok,
+                                 jnp.full((B,), S, jnp.int32))
+    assert out.shape == (B, cfg.vocab_padded())
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_long_context_applicability_matrix(arch):
+    """DESIGN.md §4: long_500k runs iff the arch is sub-quadratic."""
+    cfg = configs.get(arch)
+    ok, why = applicable(cfg, SHAPES["long_500k"])
+    assert ok == cfg.sub_quadratic
+    if not ok:
+        assert "quadratic" in why
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_numbers_match_assignment(arch):
+    """The registry carries the exact published dimensions."""
+    cfg = configs.get(arch)
+    expected = {
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "mamba2-1.3b": (48, 2048, 64, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "mixtral-8x7b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.mla.kv_lora_rank == 512 and cfg.moe.shared_experts == 2
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.d_state == 128

@@ -1,0 +1,108 @@
+"""Shallow NF behaviour tests (paper §6.1 NFs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packet import make_udp_batch
+from repro.nf.chain import Chain, to_explicit_drops
+from repro.nf.firewall import Firewall
+from repro.nf.macswap import MacSwap
+from repro.nf.maglev import MaglevLB, build_table
+from repro.nf.nat import Nat
+
+
+def mk(key=0, n=64, size=300):
+    return make_udp_batch(jax.random.key(key), n, size, pmax=512)
+
+
+class TestFirewall:
+    def test_blocks_listed_ips(self):
+        p = mk()
+        fw = Firewall(rules=(int(p.src_ip[0]), int(p.src_ip[3])))
+        st = fw.init_state()
+        _, out, drop, _ = fw(st, p)
+        assert bool(drop[0]) and bool(drop[3])
+        blocked = np.isin(np.asarray(p.src_ip), np.asarray(st))
+        np.testing.assert_array_equal(np.asarray(drop), blocked)
+
+    def test_never_touches_payload(self):
+        p = mk()
+        fw = Firewall(rules=(1, 2, 3))
+        _, out, _, _ = fw(fw.init_state(), p)
+        assert jnp.all(out.payload == p.payload)
+
+
+class TestNat:
+    def test_same_flow_same_mapping(self):
+        nat = Nat()
+        st = nat.init_state()
+        p = mk(n=32, size=200)
+        p = p.replace(src_ip=jnp.full((32,), 42, jnp.int32),
+                      src_port=jnp.full((32,), 1000, jnp.int32))
+        _, out, drop, _ = nat(st, p)
+        assert not bool(drop.any())
+        assert bool(jnp.all(out.src_ip == nat.nat_ip))
+        assert len(set(map(int, out.src_port))) == 1  # one flow, one port
+
+    def test_distinct_flows_distinct_ports(self):
+        nat = Nat()
+        st = nat.init_state()
+        p = mk(n=64)
+        st, out, drop, _ = nat(st, p)
+        ports = np.asarray(out.src_port)[~np.asarray(drop)]
+        assert len(set(ports.tolist())) == len(ports)
+
+    def test_mapping_persists_across_batches(self):
+        nat = Nat()
+        st = nat.init_state()
+        p = mk(n=8)
+        st, out1, _, _ = nat(st, p)
+        st, out2, _, _ = nat(st, p)  # same flows again
+        np.testing.assert_array_equal(np.asarray(out1.src_port),
+                                      np.asarray(out2.src_port))
+
+
+class TestMaglev:
+    def test_table_is_balanced(self):
+        backends = tuple(range(8))
+        table = build_table(backends, 251)
+        counts = np.bincount(table, minlength=8)
+        assert counts.min() >= 251 // 8 - 2 and counts.max() <= 251 // 8 + 2
+
+    def test_flow_affinity(self):
+        lb = MaglevLB()
+        st = lb.init_state()
+        p = mk(n=16)
+        _, out1, _, _ = lb(st, p)
+        _, out2, _, _ = lb(st, p)
+        np.testing.assert_array_equal(np.asarray(out1.dst_ip),
+                                      np.asarray(out2.dst_ip))
+        assert np.isin(np.asarray(out1.dst_ip),
+                       np.asarray(st["backend_ips"])).all()
+
+
+class TestChain:
+    def test_fw_nat_lb_chain(self):
+        p = mk(n=64)
+        chain = Chain((Firewall(rules=(int(p.src_ip[0]),)), Nat(), MaglevLB(),
+                       MacSwap()))
+        states = chain.init_state()
+        _, out, dropped, cycles = chain.run(states, p)
+        assert bool(dropped[0])
+        assert cycles > 0
+        # surviving packets: NAT'd, LB'd and MAC-swapped
+        alive = np.asarray(out.alive)
+        assert (np.asarray(out.src_ip)[alive] == 0x0A000001).all()
+        np.testing.assert_array_equal(np.asarray(out.dst_mac)[alive],
+                                      np.asarray(p.src_mac)[alive])
+
+    def test_explicit_drop_conversion(self):
+        p = mk(n=16)
+        p = p.replace(pp_valid=jnp.ones((16,), bool),
+                      pp_enb=jnp.ones((16,), jnp.int32))
+        dropped = jnp.zeros((16,), bool).at[2].set(True).at[5].set(True)
+        pkts = p.replace(alive=p.alive & ~dropped)
+        out = to_explicit_drops(pkts, dropped)
+        assert bool(out.alive[2]) and bool(out.alive[5])
+        assert int(out.pp_op[2]) == 1
+        assert int(out.payload_len[2]) == 0

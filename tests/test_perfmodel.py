@@ -1,0 +1,102 @@
+"""Analytic performance model sanity against the paper's own numbers."""
+import pytest
+
+from repro.core.park import ParkConfig
+from repro.switchsim import resources
+from repro.switchsim.perfmodel import (GOODPUT_BYTES, ServerModel,
+                                       TrafficDigest, digest, evaluate,
+                                       peak_goodput)
+from repro.traffic.generator import ENTERPRISE_MEAN, enterprise, fixed
+
+
+class TestDigest:
+    def test_256B_packets_paper_math(self):
+        """Paper §6.2.2: 256B packets -> PayloadPark sends 103B packets."""
+        d = digest([256], [1.0], park_bytes=160, min_park_len=160,
+                   parking=True)
+        assert d.mean_srv_bytes == pytest.approx(103.0)
+        assert d.park_fraction == 1.0
+
+    def test_enterprise_30pct_unparked(self):
+        wl = enterprise()
+        d = digest(wl.sizes, wl.probs, 160, 160, parking=True)
+        assert d.park_fraction == pytest.approx(0.70, abs=0.02)
+        assert wl.mean_pkt_bytes == pytest.approx(ENTERPRISE_MEAN)
+        assert 850 < ENTERPRISE_MEAN < 920  # paper: avg ~882B
+
+
+class TestEvaluate:
+    def test_goodput_units(self):
+        """Paper §6.1: 10 Mpps == 3.36 Gbps goodput (42B headers)."""
+        m = ServerModel(link_gbps=40)
+        d = digest([500], [1.0], 160, 160, parking=False)
+        op = evaluate(m, d, nf_cycles=[50.0], send_gbps=40.0)
+        assert op.pps == pytest.approx(10e6, rel=0.01)
+        assert op.goodput_gbps == pytest.approx(3.36, rel=0.01)
+
+    def test_pcie_transaction_cap(self):
+        """Paper §6.2.2: '26 Gbps accommodates 31 million 103 byte packets';
+        the NIC cannot run 40GE below ~170B packets."""
+        # isolate the NIC: no framework/cpu caps
+        m = ServerModel(framework_mpps=1000.0)
+        d_small = digest([160 + 42], [1.0], 160, 160, parking=True)  # 49B
+        op = evaluate(m, d_small, [5.0], send_gbps=40.0)
+        assert op.bottleneck == "pcie_txn"
+        d170 = digest([170], [1.0], 160, 160, parking=False)
+        cap_pps = m.pcie_mpps * 1e6
+        assert 40e9 / (170 * 8) <= cap_pps  # 170B just fits 40GE
+
+    def test_parking_improves_peak_goodput(self):
+        """Fixed 384..1492B packets: goodput gain in the paper's 10-36%
+        band (Fig. 8)."""
+        m = ServerModel(link_gbps=40)
+        for size in (384, 512, 1024, 1492):
+            chain = [46.0, 80.0]  # FW(1 rule) -> NAT
+            base = peak_goodput(m, digest([size], [1.0], 160, 160, False),
+                                chain)
+            park = peak_goodput(m, digest([size], [1.0], 160, 160, True),
+                                chain, parking=True,
+                                table_capacity=40_000, max_exp=1)
+            gain = park.goodput_gbps / base.goodput_gbps - 1
+            assert 0.05 < gain < 0.60, (size, gain)
+
+    def test_no_latency_penalty_below_saturation(self):
+        """Paper Fig. 7: before baseline saturation, PayloadPark latency is
+        within a microsecond of baseline."""
+        m = ServerModel(link_gbps=10)
+        wl = enterprise()
+        d_base = digest(wl.sizes, wl.probs, 160, 160, False)
+        d_park = digest(wl.sizes, wl.probs, 160, 160, True)
+        for rate in (2.0, 4.0, 6.0, 8.0):
+            b = evaluate(m, d_base, [160.0, 80.0, 120.0], rate)
+            p = evaluate(m, d_park, [160.0, 80.0, 120.0], rate)
+            assert p.latency_us <= b.latency_us + 1.0
+
+    def test_compute_bound_nf_heavy_no_gain(self):
+        """Paper §6.3.3: NF-Heavy with small packets is compute bound; no
+        goodput gain from parking."""
+        m = ServerModel(link_gbps=40)
+        base = peak_goodput(m, digest([512], [1.0], 160, 160, False), [570.0])
+        park = peak_goodput(m, digest([512], [1.0], 160, 160, True), [570.0],
+                            parking=True, table_capacity=40_000)
+        assert base.bottleneck == "cpu"
+        assert park.goodput_gbps / base.goodput_gbps < 1.02
+
+
+class TestResources:
+    def test_table1_band(self):
+        """Resource model lands in the paper's Table 1 band: avg SRAM ~26%/
+        38% for 4/8 servers, peak < 50%, PHV < 45%."""
+        cfg = ParkConfig(capacity=8192)
+        u4 = resources.utilization(cfg, nf_servers=1)  # 1 server/pipe x4 pipes
+        u8 = resources.utilization(cfg, nf_servers=2)  # 2 servers/pipe
+        assert u4.sram_avg_pct < u8.sram_avg_pct
+        assert u8.sram_peak_pct < 100.0
+        assert u4.phv_pct < 45.0
+        assert u4.vliw_pct < 20.0
+
+    def test_capacity_memory_inversion(self):
+        cfg = ParkConfig()
+        slots = resources.capacity_for_memory_fraction(0.26, cfg)
+        # 26% of a 15.36MB pipe at 166B/slot ~= 24k slots
+        assert 15_000 < slots < 30_000
