@@ -1,0 +1,182 @@
+"""Multi-pipe scanned-engine benchmark: packets/sec and goodput gain.
+
+Measures what the seed host-loop could not: the compiled engine's packet
+rate at 1/2/4/8 pipes (the paper's ToR switch services up to 8 NF servers,
+one per-port pipe each, §6.3.2) and the goodput gain realized on the
+switch<->server links, both measured (byte counts from the simulation) and
+predicted (the calibrated analytic model fed with the measured digest).
+
+At 1 pipe it also verifies the engine is wire-identical to the seed Python
+chunk loop on the same trace and reports the speedup over it.
+
+Two effects worth knowing when reading the numbers:
+  * pipes are vmapped — on a single CPU device they serialize, so wall-clock
+    pps does NOT scale with pipe count here; the model-predicted aggregate
+    goodput (``model_goodput_gbps``, per-port links and servers) is the
+    multi-server scaling metric.  On parallel hardware the pipe axis maps to
+    independent compute.
+  * per-pipe NF state is replicated (each pipe fronts its own server), so a
+    single pipe's NAT flow table saturates at high flow counts while split
+    pipes do not — chain drops then skew the measured byte saving (dropped
+    packets never make the return trip).  The ``merges`` figure in the
+    derived column exposes this.
+
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 1 2 4 8
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 2 --tiny
+
+Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packet import to_time_major, wire_bytes
+from repro.core.park import ParkConfig
+from repro.nf.chain import Chain
+from repro.nf.firewall import Firewall
+from repro.nf.nat import Nat
+from repro.switchsim import engine as E
+from repro.switchsim import perfmodel as P
+from repro.switchsim.simulate import simulate_loop
+from repro.traffic.generator import enterprise, steer_pipes
+
+
+def _cat(batches):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *batches)
+
+
+def _time(fn, repeats: int) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
+          verify: bool = True, explicit_drops: bool = False):
+    wl = enterprise()
+    pkts = wl.make_batch(jax.random.key(0), n_pkts, pmax=pmax)
+    rules = tuple(int(ip) for ip in
+                  np.unique(np.asarray(pkts.src_ip))[:20].tolist())
+    chain = Chain((Firewall(rules=rules), Nat()))
+    cfg = ParkConfig(capacity=capacity, max_exp=2, pmax=pmax)
+    model = P.ServerModel()
+    rows = []
+
+    for n_pipes in pipes_list:
+        shards, steer_stats = steer_pipes(pkts, n_pipes, chunk=chunk)
+        traces = jax.tree.map(
+            lambda a: a.reshape(
+                (n_pipes, a.shape[1] // chunk, chunk) + a.shape[2:]), shards)
+
+        def run(traces=traces):
+            res = E.run_pipes(cfg, chain, traces, window=window,
+                              explicit_drops=explicit_drops)
+            jax.block_until_ready(res.merged.payload)
+            return res
+
+        res = run()
+        dt = _time(run, repeats)
+        pps = n_pkts / dt
+        gain = E.goodput_gain(res)
+        alive = sum(steer_stats["per_pipe_arrivals"]) \
+            - steer_stats["overflow"]
+        d = P.measured_digest(
+            alive, res.wire_bytes, res.srv_fwd_bytes,
+            res.counters["splits"] / max(alive, 1))
+        base_d = P.TrafficDigest(d.mean_wire_bytes, d.mean_wire_bytes, 0.0)
+        op_park = P.scale_pipes(
+            P.peak_goodput(model, d, chain.cycle_costs(),
+                           table_capacity=cfg.capacity, max_exp=cfg.max_exp,
+                           parking=True), n_pipes)
+        op_base = P.scale_pipes(
+            P.peak_goodput(model, base_d, chain.cycle_costs()), n_pipes)
+        model_gain = op_park.goodput_gbps / op_base.goodput_gbps - 1.0
+        rows.append((
+            f"pipeline/pipes{n_pipes}/pps", round(pps),
+            f"wall_s={dt:.4f};splits={res.counters['splits']};"
+            f"merges={res.counters['merges']};"
+            f"premature={res.counters['premature_evictions']};"
+            f"overflow={steer_stats['overflow']}"))
+        rows.append((
+            f"pipeline/pipes{n_pipes}/goodput_gain",
+            round(gain["goodput_gain"], 4),
+            f"link_byte_saving={gain['link_byte_saving']:.4f};"
+            f"model_peak_gain={model_gain:.4f};"
+            f"model_goodput_gbps={op_park.goodput_gbps:.2f};"
+            f"bottleneck={op_park.bottleneck}"))
+
+    if verify and 1 in pipes_list:
+        trace = to_time_major(pkts, chunk)
+        eng = E.run_engine(cfg, chain, trace, window=window,
+                           explicit_drops=explicit_drops, collect_sent=True)
+
+        def run_loop():
+            return simulate_loop(cfg, chain, pkts, window=window, chunk=chunk,
+                                 explicit_drops=explicit_drops)
+
+        loop_res = run_loop()
+        dt_loop = _time(run_loop, max(1, repeats // 2))
+        dt_eng = _time(
+            lambda: jax.block_until_ready(
+                E.run_engine(cfg, chain, trace, window=window,
+                             explicit_drops=explicit_drops).merged.payload),
+            repeats)
+        got, gl = wire_bytes(
+            jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                         eng.merged))
+        want, wl_ = wire_bytes(_cat(loop_res.merged))
+        identical = (np.array_equal(np.asarray(got), np.asarray(want))
+                     and np.array_equal(np.asarray(gl), np.asarray(wl_))
+                     and eng.counters == loop_res.counters
+                     and eng.srv_bytes == loop_res.srv_bytes
+                     and eng.wire_bytes == loop_res.wire_bytes)
+        rows.append((
+            "pipeline/engine_vs_seed_loop/identical", int(identical),
+            f"speedup={dt_loop / dt_eng:.2f}x;"
+            f"loop_s={dt_loop:.4f};engine_s={dt_eng:.4f}"))
+        if not identical:
+            raise SystemExit("engine output diverged from seed loop")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pipes", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--packets", type=int, default=16384)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--window", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=4096)
+    ap.add_argument("--pmax", type=int, default=2048)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--explicit-drops", action="store_true",
+                    help="NF-dropped parked packets send OP=drop "
+                         "notifications back to the switch (paper §6.2.4)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the bit-identical check vs the seed loop")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 512 packets, chunk 64, small table")
+    args = ap.parse_args()
+    if args.tiny:
+        args.packets, args.chunk, args.capacity = 512, 64, 256
+        args.pmax, args.repeats = 512, 1
+    if args.packets % args.chunk:
+        ap.error(f"--packets ({args.packets}) must be a multiple of "
+                 f"--chunk ({args.chunk})")
+    rows = bench(args.pipes, args.packets, args.chunk, args.window,
+                 args.capacity, args.pmax, args.repeats,
+                 verify=not args.no_verify,
+                 explicit_drops=args.explicit_drops)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{str(derived).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

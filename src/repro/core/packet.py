@@ -125,6 +125,50 @@ def make_udp_batch(
     )
 
 
+def dead_batch(batch: int, pmax: int) -> PacketBatch:
+    """All-dead batch (``alive=False`` everywhere, zero fields).
+
+    Dead packets are no-ops for every NF and for Split/Merge (all state
+    updates are predicated on ``alive``), so dead batches serve as padding:
+    ring-buffer seeds and trace tails in the scanned engine (DESIGN.md §3),
+    and overflow rows in pipe steering.
+    """
+    z = jnp.zeros((batch,), jnp.int32)
+    return PacketBatch(
+        dst_mac=z, src_mac=z, src_ip=z, dst_ip=z, proto=z,
+        src_port=z, dst_port=z,
+        payload_len=z,
+        payload=jnp.zeros((batch, pmax), jnp.uint8),
+        alive=jnp.zeros((batch,), bool),
+        pp_valid=jnp.zeros((batch,), bool),
+        pp_enb=z, pp_op=z, pp_ti=z, pp_clk=z, pp_crc=z,
+    )
+
+
+def gather_rows(p: PacketBatch, idx: jax.Array) -> PacketBatch:
+    """Gather packets by row index; any index == batch_size yields a dead
+    packet.  Used by the pipe-steering scatter (traffic.generator)."""
+    padded = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.zeros((1,) + a.shape[1:], a.dtype)], axis=0), p)
+    return jax.tree.map(lambda a: a[idx], padded)
+
+
+def to_time_major(p: PacketBatch, chunk: int) -> PacketBatch:
+    """Reshape a flat (B, ...) batch into a (T, chunk, ...) trace for the
+    scanned engine.  B must be a multiple of ``chunk``."""
+    b = p.batch_size
+    assert b % chunk == 0, (b, chunk)
+    return jax.tree.map(
+        lambda a: a.reshape((b // chunk, chunk) + a.shape[1:]), p)
+
+
+def from_time_major(p: PacketBatch) -> PacketBatch:
+    """Inverse of ``to_time_major``: (T, chunk, ...) -> (T*chunk, ...)."""
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), p)
+
+
 @partial(jax.jit, static_argnames=())
 def wire_bytes(p: PacketBatch) -> tuple[jax.Array, jax.Array]:
     """Serialize each packet to its on-wire byte string (B, 42+7+PMAX) uint8.

@@ -146,13 +146,15 @@ def _split_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
     return (ti, clk, meta_exp, meta_clk, meta_len), outs
 
 
-@partial(jax.jit, static_argnames=("cfg", "use_kernel"))
-def split(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-          use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+             use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
     """Split operation: park payload prefixes, emit header-only packets.
 
     Returns (new_state, packets-as-sent-to-the-NF-server).  Every alive packet
     leaves with a PayloadPark header (ENB=1 if parked, else 0 — §6.1).
+
+    This is the un-jitted body, composable inside ``lax.scan`` (the
+    multi-pipe engine, DESIGN.md §3); ``split`` is the jitted entry point.
     """
     (ti, clk, meta_exp, meta_clk, meta_len), d = _split_control(cfg, state, pkts)
 
@@ -199,6 +201,9 @@ def split(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     return new_state, out
 
 
+split = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(split_fn)
+
+
 # --------------------------------------------------------------------------
 # Merge + Explicit Drop (paper Algorithm 2, §6.2.4)
 # --------------------------------------------------------------------------
@@ -236,9 +241,8 @@ def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
     return (meta_exp, meta_clk, meta_len), outs
 
 
-@partial(jax.jit, static_argnames=("cfg", "use_kernel"))
-def merge(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-          use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+             use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
     """Merge (and Explicit Drop) for packets returning from the NF server.
 
     Outcomes per packet:
@@ -246,6 +250,9 @@ def merge(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
       * ENB=1, OP=merge, tag valid: payload re-attached, slot freed.
       * ENB=1, OP=drop, tag valid: slot freed, packet consumed (§6.2.4).
       * CRC or generation mismatch: packet dropped, counted.
+
+    Un-jitted body for ``lax.scan`` composition (DESIGN.md §3); ``merge`` is
+    the jitted entry point.
     """
     (meta_exp, meta_clk, meta_len), d = _merge_control(cfg, state, pkts)
 
@@ -299,6 +306,9 @@ def merge(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
         pp_crc=jnp.where(forwarded | dropped, 0, pkts.pp_crc),
     )
     return new_state, out
+
+
+merge = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(merge_fn)
 
 
 def stats(state: ParkState) -> dict[str, Any]:

@@ -40,6 +40,19 @@ class Chain:
             new_states.append(st)
         return tuple(new_states), pkts, dropped, total_cycles
 
+    def cycle_costs(self) -> tuple[float, ...]:
+        """Per-NF CPU cycle costs, in chain order, for the analytic model
+        (perfmodel wants the slowest single NF — OpenNetVM pins each NF to
+        its own core, §6.1).  Probed by running each NF on one dead packet;
+        every NF reports its cycle cost as a per-call Python float."""
+        from repro.core.packet import dead_batch
+        probe = dead_batch(1, 16)
+        costs = []
+        for nf in self.nfs:
+            _, _, _, cycles = nf(nf.init_state(), probe)
+            costs.append(float(cycles))
+        return tuple(costs)
+
 
 def to_explicit_drops(pkts: PacketBatch, dropped) -> PacketBatch:
     """Convert chain-dropped, parked packets into OP=drop notifications.

@@ -1,0 +1,256 @@
+"""Device-resident, multi-pipe PayloadPark simulation engine.
+
+The seed ``simulate()`` drove one ``ParkState`` through a host-side Python
+chunk loop with per-chunk ``int(jnp.sum(...))`` syncs — every chunk paid a
+dispatch + device->host round trip, and only one pipe existed.  This module
+compiles the whole split -> NF-chain -> merge timeline into ONE XLA program:
+
+  * ``lax.scan`` over time steps.  The carry holds ``(ParkState, NF-chain
+    states, in-flight ring buffer, step index)``; the per-step ys carry the
+    merged chunk plus int32 byte tallies (wire bytes in, server-link bytes),
+    so accounting lives on-device and is aggregated once at the end.
+  * The in-flight window — the paper's split->merge time delta (~30 us, §4)
+    — is a ``window``-deep ring of packet chunks indexed by ``t % window``
+    with ``dynamic_index_in_dim`` / ``dynamic_update_index_in_dim``; chunk
+    ``t`` is split at step ``t`` and its NF output merges at ``t + window``,
+    exactly the seed loop's timeline.
+  * ``vmap`` over a leading pipe axis replicates the engine per ingress
+    shard — one ``ParkState`` per pipe, mirroring the paper's per-port pipes
+    that let one ToR switch service up to 8 NF servers (§6.3.2).  Pipes
+    share nothing (the hardware pipes share nothing either); cross-pipe
+    goodput is aggregated host-side after the single device program returns.
+
+Semantics are bit-identical to the seed loop (``simulate.simulate_loop``):
+padding chunks are all-dead (``alive=False``) and every Split/Merge/NF state
+update is predicated on ``alive``, so the padded steps are exact no-ops on
+the switch state.  ``tests/test_engine.py`` asserts wire-level equality.
+
+Design notes: DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counters as C
+from repro.core.packet import PacketBatch
+from repro.core.park import ParkConfig, ParkState, init_state, merge_fn, split_fn
+from repro.nf.chain import Chain, to_explicit_drops
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Result of one engine run (single pipe unless noted).
+
+    ``merged``: (T, chunk, ...) time-major merged output, arrival order.
+    ``sent``:   (T, chunk, ...) post-split traffic, or None if not collected.
+    ``state``:  final ParkState (leading pipe axis when multi-pipe).
+    ``wire_bytes``/``srv_bytes``: exact totals, summed host-side in int64.
+    ``srv_bytes`` covers BOTH server-link directions; ``srv_fwd_bytes`` is
+    the switch->server direction alone — the bottleneck direction when the
+    NF chain drops packets (dropped packets never make the return trip).
+    """
+
+    merged: PacketBatch
+    sent: PacketBatch | None
+    state: ParkState
+    counters: dict
+    srv_bytes: int
+    srv_fwd_bytes: int
+    wire_bytes: int
+
+
+@dataclasses.dataclass
+class PipesResult(EngineResult):
+    """Aggregated multi-pipe result; per-pipe breakdowns included.
+
+    ``merged``/``sent`` keep the leading pipe axis: (P, T, chunk, ...).
+    ``counters`` is the cross-pipe sum; ``per_pipe_counters`` the breakdown.
+    """
+
+    per_pipe_counters: list[dict] = dataclasses.field(default_factory=list)
+    per_pipe_srv_bytes: list[int] = dataclasses.field(default_factory=list)
+    per_pipe_wire_bytes: list[int] = dataclasses.field(default_factory=list)
+
+
+def _alive_bytes(p: PacketBatch) -> jax.Array:
+    return jnp.sum(jnp.where(p.alive, p.pkt_len(), 0))
+
+
+def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
+                explicit_drops: bool, use_kernel: bool, collect_sent: bool):
+    """Single-pipe scan body: trace (T+window, chunk, ...) -> ys + final."""
+
+    def run(trace: PacketBatch):
+        # All-dead chunks are all-zeros in every field (alive=False == 0),
+        # so a zeros ring is a ring of dead chunks.
+        ring = jax.tree.map(
+            lambda a: jnp.zeros((max(window, 1),) + a.shape[1:], a.dtype),
+            trace)
+        carry0 = (init_state(cfg), chain.init_state(), ring,
+                  jnp.zeros((), jnp.int32))
+
+        def step(carry, cin):
+            state, cstates, ring, t = carry
+            wire_b = _alive_bytes(cin)
+            state, out = split_fn(cfg, state, cin, use_kernel=use_kernel)
+            srv_b = _alive_bytes(out)
+            cstates, nf_out, dropped, _cycles = chain.run(cstates, out)
+            if explicit_drops:
+                nf_out = to_explicit_drops(nf_out, dropped)
+            if window == 0:
+                returning = nf_out
+            else:
+                slot = jnp.mod(t, window)
+                returning = jax.tree.map(
+                    lambda r: jax.lax.dynamic_index_in_dim(
+                        r, slot, axis=0, keepdims=False), ring)
+                ring = jax.tree.map(
+                    lambda r, v: jax.lax.dynamic_update_index_in_dim(
+                        r, v, slot, axis=0), ring, nf_out)
+            srv_fwd_b = srv_b
+            srv_b = srv_b + _alive_bytes(returning)
+            state, m = merge_fn(cfg, state, returning, use_kernel=use_kernel)
+            ys = dict(merged=m, wire_b=wire_b, srv_b=srv_b,
+                      srv_fwd_b=srv_fwd_b)
+            if collect_sent:
+                ys["sent"] = out
+            return (state, cstates, ring, t + 1), ys
+
+        (state, _, _, _), ys = jax.lax.scan(step, carry0, trace)
+        return state, ys
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _compiled(cfg: ParkConfig, chain: Chain, window: int,
+              explicit_drops: bool, use_kernel: bool, collect_sent: bool,
+              pipes: bool):
+    run = _build_scan(cfg, chain, window, explicit_drops, use_kernel,
+                      collect_sent)
+    if pipes:
+        run = jax.vmap(run)
+    return jax.jit(run)
+
+
+def _pad_trace(trace: PacketBatch, window: int, axis: int = 0) -> PacketBatch:
+    """Append ``window`` all-dead chunks (zeros) along the time axis so the
+    last in-flight chunks drain through the scan."""
+    if window == 0:
+        return trace
+
+    def pad(a):
+        shape = list(a.shape)
+        shape[axis] = window
+        return jnp.concatenate([a, jnp.zeros(shape, a.dtype)], axis=axis)
+
+    return jax.tree.map(pad, trace)
+
+
+def _finalize(ys: dict, window: int, collect_sent: bool, time_axis: int):
+    """Slice the warm-up/drain steps off the ys and sum byte tallies."""
+    t_pad = ys["wire_b"].shape[-1]
+    t_real = t_pad - window
+
+    def slice_time(a, start, stop):
+        idx = [slice(None)] * a.ndim
+        idx[time_axis] = slice(start, stop)
+        return a[tuple(idx)]
+
+    merged = jax.tree.map(
+        lambda a: slice_time(a, window, t_pad), ys["merged"])
+    sent = None
+    if collect_sent:
+        sent = jax.tree.map(lambda a: slice_time(a, 0, t_real), ys["sent"])
+    wire = np.asarray(ys["wire_b"], np.int64).sum()
+    srv = np.asarray(ys["srv_b"], np.int64).sum()
+    srv_fwd = np.asarray(ys["srv_fwd_b"], np.int64).sum()
+    return merged, sent, int(wire), int(srv), int(srv_fwd)
+
+
+def run_engine(
+    cfg: ParkConfig,
+    chain: Chain,
+    trace: PacketBatch,
+    window: int = 1,
+    explicit_drops: bool = False,
+    use_kernel: bool = False,
+    collect_sent: bool = False,
+) -> EngineResult:
+    """Run one pipe over a time-major trace (T, chunk, ...) under one jit.
+
+    Bit-identical to ``simulate.simulate_loop`` on the same trace (the seed
+    Python loop), but the whole timeline is a single compiled program.
+    """
+    trace = _pad_trace(trace, window, axis=0)
+    fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
+                   collect_sent, pipes=False)
+    state, ys = fn(trace)
+    merged, sent, wire, srv, srv_fwd = _finalize(ys, window, collect_sent,
+                                                 time_axis=0)
+    return EngineResult(
+        merged=merged, sent=sent, state=state,
+        counters=C.as_dict(state.counters),
+        srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
+    )
+
+
+def run_pipes(
+    cfg: ParkConfig,
+    chain: Chain,
+    traces: PacketBatch,
+    window: int = 1,
+    explicit_drops: bool = False,
+    use_kernel: bool = False,
+    collect_sent: bool = False,
+) -> PipesResult:
+    """Run P independent pipes over (P, T, chunk, ...) traces, vmapped.
+
+    Each pipe owns a fresh ``ParkState`` and NF-chain state (the paper's
+    per-port pipes share nothing, §6.3.2); one compiled program drives all
+    of them.  Byte totals and counters are aggregated across pipes.
+    """
+    n_pipes = jax.tree.leaves(traces)[0].shape[0]
+    traces = _pad_trace(traces, window, axis=1)
+    fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
+                   collect_sent, pipes=True)
+    state, ys = fn(traces)
+    merged, sent, wire, srv, srv_fwd = _finalize(ys, window, collect_sent,
+                                                 time_axis=1)
+    per_wire = np.asarray(ys["wire_b"], np.int64).sum(axis=-1)
+    per_srv = np.asarray(ys["srv_b"], np.int64).sum(axis=-1)
+    ctr = np.asarray(state.counters, np.int64)  # (P, C.NUM)
+    agg = dict(zip(C.NAMES, (int(v) for v in ctr.sum(axis=0))))
+    per_pipe = [dict(zip(C.NAMES, (int(v) for v in ctr[p])))
+                for p in range(n_pipes)]
+    return PipesResult(
+        merged=merged, sent=sent, state=state,
+        counters=agg, srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
+        per_pipe_counters=per_pipe,
+        per_pipe_srv_bytes=[int(v) for v in per_srv],
+        per_pipe_wire_bytes=[int(v) for v in per_wire],
+    )
+
+
+def goodput_gain(res: EngineResult) -> dict[str, Any]:
+    """Server-link byte saving vs the non-parking baseline.
+
+    Baseline carries every packet whole in BOTH directions (to and from the
+    NF server): ``2 * wire_bytes``.  Parking carries headers + un-parked
+    tails + the 7-byte PP header.  Positive saving = goodput gain on the
+    switch<->server link (the paper's §6.1 metric, byte form).
+    """
+    baseline = 2 * res.wire_bytes
+    saving = 1.0 - res.srv_bytes / baseline if baseline else 0.0
+    return dict(
+        baseline_link_bytes=baseline,
+        parked_link_bytes=res.srv_bytes,
+        link_byte_saving=saving,
+        goodput_gain=(baseline / res.srv_bytes - 1.0) if res.srv_bytes else 0.0,
+    )

@@ -80,6 +80,27 @@ def digest(sizes, probs, park_bytes: int, min_park_len: int,
     return TrafficDigest(mean_wire, srv, park_frac)
 
 
+def measured_digest(n_pkts: int, wire_bytes: int, srv_fwd_bytes: int,
+                    park_fraction: float) -> TrafficDigest:
+    """TrafficDigest from the scanned engine's measured byte totals.
+
+    ``srv_fwd_bytes`` is the engine's switch->server direction alone
+    (``EngineResult.srv_fwd_bytes``).  That is the bottleneck direction:
+    every offered packet crosses it, while the return direction carries only
+    NF-chain survivors — averaging both directions would understate the
+    forward load whenever the chain drops packets.  This closes the loop
+    between the stateful simulation and the analytic model: feed the
+    measured digest to ``evaluate``/``peak_goodput`` to predict rates for
+    the traffic actually simulated, hash skew, eviction losses and all.
+    """
+    n = max(n_pkts, 1)
+    return TrafficDigest(
+        mean_wire_bytes=wire_bytes / n,
+        mean_srv_bytes=srv_fwd_bytes / n,
+        park_fraction=park_fraction,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class OperatingPoint:
     send_gbps: float
@@ -158,3 +179,20 @@ def peak_goodput(m: ServerModel, d: TrafficDigest, nf_cycles,
         else:
             hi = mid
     return evaluate(m, d, nf_cycles, lo, recirculation)
+
+
+def scale_pipes(op: OperatingPoint, pipes: int) -> OperatingPoint:
+    """Aggregate operating point for ``pipes`` independent per-port pipes.
+
+    The paper services up to 8 NF servers from one ToR switch, one pipe per
+    server-facing port (§6.3.2); pipes share no switch state and each feeds
+    its own server/link, so throughput-like quantities scale linearly while
+    per-packet latency, drop rate and utilization are unchanged.
+    """
+    return dataclasses.replace(
+        op,
+        send_gbps=op.send_gbps * pipes,
+        pps=op.pps * pipes,
+        goodput_gbps=op.goodput_gbps * pipes,
+        pcie_gbps_used=op.pcie_gbps_used * pipes,
+    )

@@ -12,19 +12,30 @@ and Merge traffic); chunk ``t`` is split at step ``t`` and its NF-chain output
 returns for merging at step ``t + window`` — i.e. ``window * chunk`` packets
 are in flight, exactly the quantity that pressures the lookup table
 (M * EXP >= in_flight for eviction-free operation, §4).
+
+Two implementations share these semantics bit-for-bit:
+
+  * ``simulate()`` — the list-of-chunks API, now a thin wrapper over the
+    jit-compiled ``switchsim.engine`` scan (DESIGN.md §3).  Same signature
+    and ``SimResult`` as the seed; the whole timeline runs as one XLA
+    program instead of a host loop with per-chunk device syncs.
+  * ``simulate_loop()`` — the original host-side Python chunk loop, kept as
+    the executable reference: ``tests/test_engine.py`` asserts the scanned
+    engine reproduces it wire-identically, and ``benchmarks/bench_pipeline``
+    reports the speedup over it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import counters as C
-from repro.core.packet import PacketBatch
+from repro.core.packet import PacketBatch, to_time_major
 from repro.core.park import ParkConfig, ParkState, init_state, merge, split
 from repro.nf.chain import Chain, to_explicit_drops
+from repro.switchsim import engine as engine_mod
 
 
 @dataclasses.dataclass
@@ -35,7 +46,6 @@ class SimResult:
     counters: dict
     srv_bytes: int          # total bytes switch->server (goodput accounting)
     wire_bytes: int         # total bytes generator->switch
-
 
 def _chunks(pkts: PacketBatch, chunk: int):
     n = pkts.batch_size
@@ -56,7 +66,44 @@ def simulate(
     use_kernel: bool = False,
 ) -> SimResult:
     """Stream ``pkts`` through split -> NF chain -> merge with ``window``
-    chunks in flight.  Returns every merged chunk plus final switch state."""
+    chunks in flight.  Returns every merged chunk plus final switch state.
+
+    Compatibility wrapper: delegates to the scanned engine (one compiled
+    program, on-device accounting) and re-materializes the list-of-chunks
+    view the seed API exposed.
+    """
+    trace = to_time_major(pkts, chunk)
+    res = engine_mod.run_engine(
+        cfg, chain, trace, window=window, explicit_drops=explicit_drops,
+        use_kernel=use_kernel, collect_sent=True)
+    t = trace.src_ip.shape[0]
+    merged = [jax.tree.map(lambda a: a[i], res.merged) for i in range(t)]
+    sent = [jax.tree.map(lambda a: a[i], res.sent) for i in range(t)]
+    return SimResult(
+        merged=merged,
+        state=res.state,
+        sent_to_server=sent,
+        counters=res.counters,
+        srv_bytes=res.srv_bytes,
+        wire_bytes=res.wire_bytes,
+    )
+
+
+def simulate_loop(
+    cfg: ParkConfig,
+    chain: Chain,
+    pkts: PacketBatch,
+    window: int = 1,
+    chunk: int = 256,
+    explicit_drops: bool = False,
+    use_kernel: bool = False,
+) -> SimResult:
+    """The seed host-side chunk loop (reference implementation).
+
+    One jitted dispatch per chunk per operation plus a device->host sync for
+    every byte tally — the dispatch overhead the scanned engine removes.
+    Kept as the behavioural oracle for ``simulate()`` / the engine.
+    """
     state = init_state(cfg)
     chain_states = chain.init_state()
     inflight: list = []

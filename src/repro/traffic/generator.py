@@ -8,6 +8,13 @@ Two workload families:
     the mean packet size is ~882 B.
 
 Packet sizes are total on-wire bytes including the 42-byte header.
+
+``steer_pipes`` is the ingress steering stage for the multi-pipe engine
+(DESIGN.md §3): it shards a flat batch across N per-port pipes by a hash of
+the flow 5-tuple, the software analogue of the ToR switch mapping each
+server-facing port to its own pipeline (§6.3.2).  Flow affinity is exact:
+every packet of a 5-tuple lands in the same pipe, so per-pipe NAT/LB state
+behaves as it would behind a real port.
 """
 from __future__ import annotations
 
@@ -17,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packet import HDR_BYTES, PacketBatch, make_udp_batch
+from repro.core.packet import (HDR_BYTES, PacketBatch, gather_rows,
+                               make_udp_batch)
 
 # Digitized bimodal enterprise distribution (paper Fig. 6).  30 % of packets
 # are below 202 B total (payload < 160 B -> ENB=0), mean ~= 882 B.
@@ -56,3 +64,72 @@ def fixed(size: int) -> Workload:
 
 def enterprise() -> Workload:
     return Workload("enterprise", ENTERPRISE_SIZES, ENTERPRISE_PROBS)
+
+
+# --------------------------------------------------------------------------
+# Multi-pipe ingress steering (DESIGN.md §3)
+# --------------------------------------------------------------------------
+
+def flow_hash(pkts: PacketBatch) -> jax.Array:
+    """Avalanche hash of the flow 5-tuple, (B,) non-negative int32.
+
+    Built from the same murmur3-finalizer constants as the NAT flow-table
+    hash (but over the full 5-tuple, with its own mixing sequence — the two
+    are not bit-compatible); a switch would compute this with its hash
+    engine over the same header fields.
+    """
+    h = pkts.src_ip ^ jnp.int32(-1640531527)
+    h = (h * jnp.int32(-2048144789)) ^ pkts.dst_ip
+    h = h ^ (h >> 13)
+    h = (h * jnp.int32(-1028477379)) ^ (pkts.src_port << 16) ^ pkts.dst_port
+    h = h ^ (h >> 16)
+    h = (h * jnp.int32(-2048144789)) ^ pkts.proto
+    h = h ^ (h >> 13)
+    return h & jnp.int32(0x7FFFFFFF)
+
+
+def steer_pipes(
+    pkts: PacketBatch,
+    num_pipes: int,
+    pipe_capacity: int | None = None,
+    chunk: int = 256,
+) -> tuple[PacketBatch, dict]:
+    """Shard a flat batch into per-pipe batches by flow hash.
+
+    Returns ``(shards, stats)`` where ``shards`` leaves have shape
+    (num_pipes, pipe_capacity, ...).  Slots beyond a pipe's arrival count
+    are dead packets; arrivals beyond ``pipe_capacity`` (hash skew) are
+    dropped and counted in ``stats['overflow']`` — the analogue of an
+    ingress-port queue overrunning.  ``pipe_capacity`` defaults to ~1.25x
+    the fair share, rounded up to a multiple of ``chunk`` so the result
+    feeds ``core.packet.to_time_major`` directly.
+
+    Packet order within a pipe preserves arrival order, so single-pipe
+    steering (num_pipes=1) is the identity modulo tail padding.
+    """
+    b = pkts.batch_size
+    pipe = flow_hash(pkts) % num_pipes                      # (B,)
+    if pipe_capacity is None:
+        fair = -(-b // num_pipes)                           # ceil
+        slack = fair if num_pipes == 1 else (fair * 5) // 4
+        pipe_capacity = -(-slack // chunk) * chunk          # round to chunk
+    onehot = pipe[:, None] == jnp.arange(num_pipes)[None, :]  # (B, P)
+    pos = jnp.cumsum(onehot, axis=0) - 1                    # arrival index
+    pos = jnp.take_along_axis(pos, pipe[:, None], axis=1)[:, 0]
+    ok = pos < pipe_capacity
+    dest = jnp.where(ok, pipe * pipe_capacity + pos,
+                     num_pipes * pipe_capacity)
+    # Invert the permutation: src_of[dest] = packet row; empty slots -> B,
+    # which gather_rows maps to a dead packet.
+    src_of = jnp.full((num_pipes * pipe_capacity,), b, jnp.int32)
+    src_of = src_of.at[dest].set(jnp.arange(b, dtype=jnp.int32), mode="drop")
+    shards = gather_rows(pkts, src_of)
+    shards = jax.tree.map(
+        lambda a: a.reshape((num_pipes, pipe_capacity) + a.shape[1:]), shards)
+    counts = jnp.sum(onehot, axis=0)
+    stats = dict(
+        per_pipe_arrivals=[int(c) for c in counts],
+        overflow=int(jnp.sum(~ok)),
+        pipe_capacity=pipe_capacity,
+    )
+    return shards, stats

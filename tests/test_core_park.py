@@ -1,9 +1,12 @@
 """Core PayloadPark: unit tests + hypothesis property tests (paper Alg. 1/2)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import counters as C
 from repro.core.header import crc16_tag

@@ -1,10 +1,13 @@
 """Serving pool (PayloadPark-at-page-granularity) + engine lifecycle."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro import configs
 from repro.configs.reduced import reduced
