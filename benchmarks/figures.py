@@ -99,8 +99,9 @@ def fig10_11_multi_server():
     d_base = digest([384], [1.0], 160, 160, False)
     d_park = digest([384], [1.0], 160, 160, True)
     # static slicing: 40% of pipe SRAM split between 2 servers per pipe
+    # (the inversion now places whole SRAM blocks per slice, like Table 1)
     cfg = ParkConfig()
-    slots = resources.capacity_for_memory_fraction(0.40, cfg) // 2
+    slots = resources.capacity_for_memory_fraction(0.40, cfg, nf_servers=2)
     rows = []
     gains = []
     lat = []
@@ -147,18 +148,23 @@ def fig12_eviction_explicit_drops():
 
 
 def fig13_recirculation():
-    """Fig. 13: recirculation (352B parked) on 10GE FW->NAT->LB; paper: +28%
-    (vs +13% without)."""
+    """Fig. 13: recirculation (352B parked, one extra pass per wide packet)
+    on 10GE FW->NAT->LB; paper: +28% (vs +13% without).  The stateful-engine
+    counterpart (table-occupancy sweep, measured recirculations and budget
+    drops) is ``benchmarks/bench_pipeline.py --recirc``."""
     m = ServerModel(link_gbps=10.0)
     wl = enterprise()
     d_base = digest(wl.sizes, wl.probs, 160, 160, False)
-    d_recirc = digest(wl.sizes, wl.probs, 352, 160, True)
+    # pass_bytes=160: one traversal parks 160B, packets parking more take
+    # one recirculation pass -> expected-passes latency term in evaluate().
+    d_recirc = digest(wl.sizes, wl.probs, 352, 160, True, pass_bytes=160)
     base = peak_goodput(m, d_base, CHAIN3)
     park = peak_goodput(m, d_recirc, CHAIN3, parking=True,
-                        table_capacity=10_000, recirculation=True)
+                        table_capacity=10_000)
     gain = 100 * (park.goodput_gbps / base.goodput_gbps - 1)
     return [("fig13/recirc_gain_pct", round(gain, 2),
              f"paper=28% (model is link-bound: see EXPERIMENTS.md), "
+             f"recirc_per_pkt={d_recirc.recirc_per_pkt:.2f}, "
              f"lat_delta_us="
              f"{park.latency_us - base.latency_us:.2f}")]
 

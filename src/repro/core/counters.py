@@ -1,10 +1,13 @@
-"""The paper's eight PayloadPark monitoring counters (§5).
+"""The paper's eight PayloadPark monitoring counters (§5), plus ours.
 
 "We maintain eight counters for monitoring PayloadPark operation": splits,
 merges, explicit drops, disabled returns (ENB=0 packets back from the NF
 server), total evictions, premature evictions, small-payload Split skips, and
 occupied-slot Split skips.  We add a ninth (CRC failures on Merge-side header
-validation, §3.2) which the paper mentions but does not enumerate.
+validation, §3.2) which the paper mentions but does not enumerate, and two
+for the recirculation path (§6.2.5, DESIGN.md §6): packets that took a
+second pipeline pass, and recirculation candidates denied by the
+recirculation-port bandwidth budget (they fall back to plain forwarding).
 """
 from __future__ import annotations
 
@@ -20,6 +23,8 @@ NAMES = (
     "skip_small_payload",  # Split disabled: payload < park size (§5)
     "skip_occupied",       # Split disabled: next metadata slot occupied
     "crc_failures",        # Merge-side tag CRC validation failures
+    "recirculations",      # packets that took a recirculation pass (§6.2.5)
+    "recirc_budget_drops", # recirc candidates denied by the port budget
 )
 IDX = {n: i for i, n in enumerate(NAMES)}
 NUM = len(NAMES)

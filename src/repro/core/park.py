@@ -1,4 +1,4 @@
-"""PayloadPark lookup table: Split / Merge / Evict / Explicit-Drop.
+"""PayloadPark lookup table: Split / Merge / Evict / Explicit-Drop / Recirculate.
 
 Faithful implementation of the paper's Algorithms 1 and 2 on a JAX state
 machine.  P4 guarantees *atomic, per-packet sequential* register semantics
@@ -15,7 +15,14 @@ Design mapping (see DESIGN.md §2):
   one stateful register access per MAT   ->  one dynamic-slice store per row
   per-port pipes                         ->  one ParkState per ingress shard
   recirculation through a second pipe    ->  ``recirculation=True`` widens the
-                                             row from 160 B to 352 B (§6.2.5)
+                                             row from 160 B to 352 B (§6.2.5);
+                                             one traversal still parks at most
+                                             ``pass_bytes`` (160 B), and
+                                             ``recirc_fn`` is the second pass
+                                             that fills the upper lanes (and
+                                             retries occupied-slot skips).
+                                             Lane scheduling/budget live in
+                                             ``switchsim.engine`` (DESIGN.md §6).
 
 Deviations from the paper, recorded per DESIGN.md:
   * the generation clock skips 0 so that ``meta_clk == 0`` unambiguously means
@@ -51,12 +58,40 @@ class ParkConfig:
     max_exp: int = 1              # Expiry threshold (paper EXP; §6.2.4 sweeps 1/2/10)
     max_clk: int = 1 << 16        # clock rollover (2-byte register, §5)
     min_park_len: int = PARK_BYTES_BASE  # eligibility threshold (§5, §6.3.3)
-    recirculation: bool = False   # §6.2.5: stripe across a second pipe
+    recirculation: bool = False   # §6.2.5: second pass through the pipeline
     pmax: int = 2048              # payload buffer capacity of PacketBatch
+    recirc_frac: float = 0.25     # recirculation-port share of pipe capacity
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.pmax < 1:
+            raise ValueError(f"pmax must be >= 1, got {self.pmax}")
+        if self.max_exp < 1:
+            raise ValueError(f"max_exp must be >= 1, got {self.max_exp}")
+        if self.max_clk < 2:
+            raise ValueError(f"max_clk must be >= 2, got {self.max_clk}")
+        if self.min_park_len < 1:
+            raise ValueError(
+                f"min_park_len must be >= 1, got {self.min_park_len}")
+        if not 0.0 <= self.recirc_frac <= 1.0:
+            raise ValueError(
+                f"recirc_frac must be in [0, 1], got {self.recirc_frac}")
 
     @property
     def park_bytes(self) -> int:
+        """Full lookup-table row width (accumulated across passes)."""
         return PARK_BYTES_RECIRC if self.recirculation else PARK_BYTES_BASE
+
+    @property
+    def pass_bytes(self) -> int:
+        """Bytes one pipeline traversal can park (the stage budget of Fig. 4).
+
+        The recirculation pass (``recirc_fn``) fills the remaining
+        ``park_bytes - pass_bytes`` lanes; with recirculation off the two
+        widths coincide and Split parks the whole row in one pass.
+        """
+        return min(PARK_BYTES_BASE, self.park_bytes)
 
     @property
     def banks(self) -> int:
@@ -127,7 +162,7 @@ def _split_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
             claim, meta_clk.at[ti_n].set(clk_n),
             jnp.where(evicted, meta_clk.at[ti_n].set(0), meta_clk),
         )
-        park_len = jnp.minimum(plen, cfg.park_bytes)
+        park_len = jnp.minimum(plen, cfg.pass_bytes)
         meta_len = jnp.where(claim, meta_len.at[ti_n].set(park_len), meta_len)
 
         out = dict(
@@ -159,7 +194,12 @@ def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     (ti, clk, meta_exp, meta_clk, meta_len), d = _split_control(cfg, state, pkts)
 
     # -- stage 3..N: stripe payload blocks into the payload table -----------
+    # Claiming zeroes the full row (incl. lanes above pass_bytes), so a later
+    # recirculation pass appends into zeros.  pmax < park_bytes is legal (the
+    # row is then partly unreachable); pad the slice up to the row width.
     park = pkts.payload[:, : cfg.park_bytes]
+    if park.shape[1] < cfg.park_bytes:
+        park = jnp.pad(park, ((0, 0), (0, cfg.park_bytes - park.shape[1])))
     lane = jnp.arange(cfg.park_bytes)[None, :]
     park = jnp.where(lane < d["park_len"][:, None], park, 0)
     if use_kernel:
@@ -202,6 +242,89 @@ def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
 
 
 split = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(split_fn)
+
+
+# --------------------------------------------------------------------------
+# Recirculation pass (paper §6.2.5)
+# --------------------------------------------------------------------------
+
+def _select_rows(mask, a, b):
+    """Per-row select between two identically-shaped PacketBatches."""
+    return jax.tree.map(
+        lambda x, y: jnp.where(
+            mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim)), x, y),
+        a, b)
+
+
+def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+              use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+    """One recirculation pass for packets re-injected through the
+    recirculation port (paper §6.2.5).  Two cases, handled in order:
+
+      * **continuation** (ENB=1 with payload remaining): append up to
+        ``park_bytes - meta_len[TI]`` more payload bytes into the packet's
+        existing row — the second traversal reaches the stages holding the
+        upper lanes of the 352-byte row.  The tag (TI, CLK, CRC) is
+        unchanged; the write is skipped if the slot was evicted in between
+        (the stale tag then surfaces as a premature eviction at Merge,
+        exactly as it would without recirculation).
+      * **retry** (ENB=0 after an occupied-slot skip): a fresh Split
+        attempt — the tagger hands out the next index, which may have been
+        freed or expired since the first pass.  A retry that fails again
+        counts another ``skip_occupied`` (counters are per attempt).
+
+    Packets come out NF-bound; lane scheduling and the recirculation-port
+    budget live in ``switchsim.engine`` (DESIGN.md §6).  The partial-row
+    append stays on the plain-JAX path (the Pallas store kernel writes
+    whole rows); retry Splits honour ``use_kernel``.
+    """
+    counters = C.bump(state.counters, "recirculations",
+                      jnp.sum(pkts.alive & pkts.pp_valid))
+
+    # -- continuation: append into the owned row ----------------------------
+    ext = pkts.alive & pkts.pp_valid & (pkts.pp_enb == 1)
+    ti = jnp.clip(pkts.pp_ti, 0, cfg.capacity - 1)
+    own = ext & (state.meta_clk[ti] == pkts.pp_clk)
+    cur = jnp.where(own, state.meta_len[ti], 0)
+    extra = jnp.where(
+        own,
+        jnp.minimum(pkts.payload_len, jnp.maximum(cfg.park_bytes - cur, 0)),
+        0)
+    do_ext = own & (extra > 0)
+
+    col = jnp.arange(cfg.park_bytes)[None, :]
+    src = col - cur[:, None]
+    ins = jnp.take_along_axis(
+        pkts.payload, jnp.clip(src, 0, cfg.pmax - 1), axis=1)
+    region = (src >= 0) & (src < extra[:, None])
+    new_row = jnp.where(region, ins, state.ptable[ti])
+    rows = jnp.where(do_ext, ti, cfg.capacity)  # OOB rows dropped
+    ptable = state.ptable.at[rows].set(new_row, mode="drop")
+    meta_len = state.meta_len.at[rows].set(cur + extra, mode="drop")
+
+    idx = jnp.arange(cfg.pmax)[None, :] + extra[:, None]
+    remainder = jnp.take_along_axis(
+        pkts.payload, jnp.clip(idx, 0, cfg.pmax - 1), axis=1)
+    new_len = pkts.payload_len - extra
+    keep = jnp.arange(cfg.pmax)[None, :] < new_len[:, None]
+    remainder = jnp.where(keep, remainder, 0)
+    ext_out = pkts.replace(
+        payload=jnp.where(do_ext[:, None], remainder, pkts.payload),
+        payload_len=jnp.where(do_ext, new_len, pkts.payload_len),
+    )
+    mid = ParkState(state.tbl_idx, state.clk, state.meta_exp, state.meta_clk,
+                    meta_len, ptable, counters)
+
+    # -- retry: a second Split attempt for ENB=0 packets --------------------
+    retry = pkts.alive & pkts.pp_valid & (pkts.pp_enb == 0)
+    retry_in = ext_out.replace(alive=retry)
+    new_state, retry_out = split_fn(cfg, mid, retry_in, use_kernel=use_kernel)
+    # split_fn rewrites header fields of its whole batch; keep its result
+    # only for the retry rows, the extension result for everything else.
+    return new_state, _select_rows(retry, retry_out, ext_out)
+
+
+recirc = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(recirc_fn)
 
 
 # --------------------------------------------------------------------------
@@ -285,8 +408,11 @@ def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     rem_idx = col - shift[:, None]
     carried = jnp.take_along_axis(
         pkts.payload, jnp.clip(rem_idx, 0, cfg.pmax - 1), axis=1)
-    pad = jnp.zeros((pkts.batch_size, cfg.pmax - cfg.park_bytes), jnp.uint8)
-    parked_full = jnp.concatenate([parked, pad], axis=1)
+    # Clamp for pmax < park_bytes (parked length never exceeds the payload
+    # that fit in pmax, so truncating the row loses nothing).
+    pad = jnp.zeros((pkts.batch_size, max(cfg.pmax - cfg.park_bytes, 0)),
+                    jnp.uint8)
+    parked_full = jnp.concatenate([parked, pad], axis=1)[:, : cfg.pmax]
     new_payload = jnp.where(col < shift[:, None], parked_full, carried)
     new_len = pkts.payload_len + shift
     keep = col < new_len[:, None]

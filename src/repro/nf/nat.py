@@ -1,10 +1,26 @@
 """NAT NF, modelled on MazuNAT (paper §6.1, from NetBricks/Click).
 
-Stateful source-NAT: the first packet of a flow (src_ip, src_port) allocates
-an external port from a monotonically increasing counter and installs a
-mapping in a linear-probed hash table; subsequent packets of the flow are
-rewritten identically.  Rewrites ``src_ip -> nat_ip`` and ``src_port`` to the
-mapped external port.  Header-only: payload is never touched.
+Stateful source-NAT with *bounded* resources.  The first packet of a flow
+(src_ip, src_port) claims a slot in a linear-probed hash table and is mapped
+to the external port **owned by that slot** (``base_port + slot``), so a
+mapping can never leave the valid uint16 range; the configuration is
+validated up front (``base_port + capacity - 1 <= 65535``).  The seed
+implementation allocated ports from a monotonically increasing counter that
+overflowed 65535 after ~55k flows and emitted invalid ``src_port`` values —
+the per-slot port is the JAX-friendly equivalent of the free-list a real NAT
+keeps: a port returns to service exactly when its slot expires.
+
+Idle flows expire EXP-style, mirroring ``core.park``'s expiry discipline:
+every mapping carries an expiry counter refreshed to ``max_exp`` on use, and
+a new flow that finds neither its mapping nor a free slot ages every slot in
+its probe window (CLOCK-style).  Slots that reach zero are reclaimed — with
+their ports — by later arrivals.  Under flow churn beyond ``capacity`` this
+turns the seed's *permanent* drops (which skewed ≥16k-flow single-pipe
+goodput traces; see ``benchmarks/bench_pipeline``) into transient drops
+while a neighbourhood ages out.
+
+Rewrites ``src_ip -> nat_ip`` and ``src_port`` to the mapped external port.
+Header-only: payload is never touched.
 
 Lookups probe a fixed depth (P4-style bounded work); inserts are sequential
 via ``lax.scan`` because two same-flow packets inside one batch must receive
@@ -41,53 +57,75 @@ class Nat:
     nat_ip: int = 0x0A000001  # 10.0.0.1
     capacity: int = 1 << 14   # flow-table slots (power of two)
     base_port: int = 10000
+    max_exp: int = 2          # EXP-style flow expiry (cf. core.park max_exp)
+
+    def __post_init__(self):
+        if self.capacity < PROBE_DEPTH:
+            raise ValueError(
+                f"capacity ({self.capacity}) must be >= PROBE_DEPTH "
+                f"({PROBE_DEPTH})")
+        if self.max_exp < 1:
+            raise ValueError(f"max_exp must be >= 1, got {self.max_exp}")
+        top = self.base_port + self.capacity - 1
+        if not (0 < self.base_port and top <= 65535):
+            raise ValueError(
+                f"port space [{self.base_port}, {top}] exceeds the valid "
+                f"uint16 range; shrink capacity or lower base_port")
 
     def init_state(self):
         return dict(
             key_ip=jnp.full((self.capacity,), -1, jnp.int32),
             key_port=jnp.full((self.capacity,), -1, jnp.int32),
-            ports=jnp.zeros((self.capacity,), jnp.int32),
-            next_port=jnp.asarray(self.base_port, jnp.int32),
+            exp=jnp.zeros((self.capacity,), jnp.int32),  # 0 = free slot
         )
 
     def __call__(self, state, pkts: PacketBatch):
         cap = self.capacity
 
         def step(carry, x):
-            key_ip, key_port, ports, next_port = carry
+            key_ip, key_port, exp = carry
             ip, port, alive = x
             h = _hash(ip, port, cap)
             slot = jnp.int32(-1)
             free = jnp.int32(-1)
             for i in range(PROBE_DEPTH):
                 idx = (h + i) % cap
-                hit_i = (key_ip[idx] == ip) & (key_port[idx] == port)
-                free_i = key_ip[idx] == -1
+                live_i = exp[idx] > 0
+                hit_i = live_i & (key_ip[idx] == ip) & (key_port[idx] == port)
                 slot = jnp.where((slot < 0) & hit_i, idx, slot)
-                free = jnp.where((free < 0) & free_i, idx, free)
-            hit = slot >= 0
-            can_insert = (~hit) & (free >= 0) & alive
+                free = jnp.where((free < 0) & ~live_i, idx, free)
+            hit = alive & (slot >= 0)
+            can_insert = alive & (slot < 0) & (free >= 0)
             idx = jnp.where(hit, slot, jnp.where(free >= 0, free, 0))
             key_ip = jnp.where(can_insert, key_ip.at[idx].set(ip), key_ip)
-            key_port = jnp.where(can_insert, key_port.at[idx].set(port), key_port)
-            ports = jnp.where(can_insert, ports.at[idx].set(next_port), ports)
-            mapped = jnp.where(hit | can_insert, ports[idx], -1)
-            next_port = jnp.where(can_insert, next_port + 1, next_port)
-            return (key_ip, key_port, ports, next_port), mapped
+            key_port = jnp.where(can_insert, key_port.at[idx].set(port),
+                                 key_port)
+            # use refreshes the expiry (core.park's EXP discipline)
+            exp = jnp.where(hit | can_insert,
+                            exp.at[idx].set(self.max_exp), exp)
+            mapped = jnp.where(hit | can_insert,
+                               jnp.int32(self.base_port) + idx, -1)
+            # CLOCK-style aging under pressure: a flow that found neither
+            # its mapping nor a free slot ages every slot it probed, so a
+            # full neighbourhood frees after max_exp failed arrivals.
+            exhausted = alive & (slot < 0) & (free < 0)
+            probed = (h + jnp.arange(PROBE_DEPTH)) % cap
+            aged = jnp.maximum(exp.at[probed].add(-1), 0)
+            exp = jnp.where(exhausted, aged, exp)
+            return (key_ip, key_port, exp), mapped
 
-        carry0 = (state["key_ip"], state["key_port"], state["ports"],
-                  state["next_port"])
-        (key_ip, key_port, ports, next_port), mapped = jax.lax.scan(
+        carry0 = (state["key_ip"], state["key_port"], state["exp"])
+        (key_ip, key_port, exp), mapped = jax.lax.scan(
             step, carry0, (pkts.src_ip, pkts.src_port, pkts.alive)
         )
         ok = pkts.alive & (mapped >= 0)
-        # Table overflow: drop the packet (a real NAT would too).
+        # Table exhausted in this probe window: drop (a real NAT would too,
+        # until expiry reclaims a port).
         drop = pkts.alive & (mapped < 0)
         out = pkts.replace(
             src_ip=jnp.where(ok, self.nat_ip, pkts.src_ip),
             src_port=jnp.where(ok, mapped, pkts.src_port),
             alive=pkts.alive & ~drop,
         )
-        new_state = dict(key_ip=key_ip, key_port=key_port, ports=ports,
-                         next_port=next_port)
+        new_state = dict(key_ip=key_ip, key_port=key_port, exp=exp)
         return new_state, out, drop, CYCLES

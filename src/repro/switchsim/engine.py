@@ -19,17 +19,30 @@ compiles the whole split -> NF-chain -> merge timeline into ONE XLA program:
     that let one ToR switch service up to 8 NF servers (§6.3.2).  Pipes
     share nothing (the hardware pipes share nothing either); cross-pipe
     goodput is aggregated host-side after the single device program returns.
+  * The recirculation lane (``cfg.recirculation``, paper §6.2.5, DESIGN.md
+    §6) is a second ring in the carry: Split outputs that want another
+    pipeline pass (partial park with row width remaining, or an
+    occupied-slot skip) detour into a ``recirc_slots``-wide lane instead of
+    forwarding, re-enter through ``core.park.recirc_fn`` at the next step,
+    and only then travel to the NF server.  Lane width is the
+    recirculation port's bandwidth share (``recirc_frac`` of the per-step
+    chunk); candidates beyond it forward as-is and are counted
+    ``recirc_budget_drops``.
 
-Semantics are bit-identical to the seed loop (``simulate.simulate_loop``):
-padding chunks are all-dead (``alive=False``) and every Split/Merge/NF state
-update is predicated on ``alive``, so the padded steps are exact no-ops on
-the switch state.  ``tests/test_engine.py`` asserts wire-level equality.
+Semantics with recirculation off are bit-identical to the seed loop
+(``simulate.simulate_loop``): padding chunks are all-dead (``alive=False``)
+and every Split/Merge/NF state update is predicated on ``alive``, so the
+padded steps are exact no-ops on the switch state.  With recirculation on,
+``simulate_loop`` mirrors the lane host-side and stays the executable
+oracle.  ``tests/test_engine.py`` / ``tests/test_recirc.py`` assert
+wire-level equality for both modes.
 
-Design notes: DESIGN.md §3.
+Design notes: DESIGN.md §3 (engine), §6 (recirculation).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import lru_cache
 from typing import Any
 
@@ -38,8 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import counters as C
-from repro.core.packet import PacketBatch
-from repro.core.park import ParkConfig, ParkState, init_state, merge_fn, split_fn
+from repro.core.packet import PacketBatch, gather_rows
+from repro.core.park import (ParkConfig, ParkState, init_state, merge_fn,
+                             occupancy, recirc_fn, split_fn)
 from repro.nf.chain import Chain, to_explicit_drops
 
 
@@ -47,13 +61,20 @@ from repro.nf.chain import Chain, to_explicit_drops
 class EngineResult:
     """Result of one engine run (single pipe unless noted).
 
-    ``merged``: (T, chunk, ...) time-major merged output, arrival order.
-    ``sent``:   (T, chunk, ...) post-split traffic, or None if not collected.
+    ``merged``: (T, chunk, ...) time-major merged output, arrival order
+    (recirculated packets re-emerge one step late, in the lane rows that
+    lead each chunk).
+    ``sent``:   (T, chunk, ...) NF-bound traffic, or None if not collected.
     ``state``:  final ParkState (leading pipe axis when multi-pipe).
     ``wire_bytes``/``srv_bytes``: exact totals, summed host-side in int64.
     ``srv_bytes`` covers BOTH server-link directions; ``srv_fwd_bytes`` is
     the switch->server direction alone — the bottleneck direction when the
     NF chain drops packets (dropped packets never make the return trip).
+    ``ret_bytes`` is the return direction the *merge stage put back on the
+    wire* (chain survivors at full size): the drop-aware baseline's return
+    trip (see ``goodput_gain``).
+    ``peak_occupancy``: max live parked slots observed at any step (max
+    across pipes when multi-pipe).
     """
 
     merged: PacketBatch
@@ -63,6 +84,8 @@ class EngineResult:
     srv_bytes: int
     srv_fwd_bytes: int
     wire_bytes: int
+    ret_bytes: int
+    peak_occupancy: int
 
 
 @dataclasses.dataclass
@@ -82,25 +105,98 @@ def _alive_bytes(p: PacketBatch) -> jax.Array:
     return jnp.sum(jnp.where(p.alive, p.pkt_len(), 0))
 
 
+def recirc_slots(cfg: ParkConfig, chunk: int) -> int:
+    """Recirculation-lane width: the per-step packet budget of the
+    recirculation port, ``floor(recirc_frac * chunk)`` — the port owns a
+    fixed share of the pipe's per-step capacity (paper §6.2.5).  0 (either
+    recirculation off, or a share smaller than one packet) disables the
+    lane entirely; Split then parks single-pass only."""
+    if not cfg.recirculation:
+        return 0
+    # epsilon guards binary-representation error (0.29 * 100 == 28.999...),
+    # so exact fractional shares floor to the intended slot count
+    return math.floor(cfg.recirc_frac * chunk + 1e-9)
+
+
+def recirc_select(cfg: ParkConfig, out: PacketBatch, budget: int):
+    """Admit up to ``budget`` recirculation candidates from a Split output.
+
+    Candidates (DESIGN.md §6):
+      * continuation — parked (ENB=1) with payload remaining: the row still
+        has ``park_bytes - pass_bytes`` spare width for a second pass;
+      * retry — Split disabled on an occupied slot (ENB=0 with an eligible
+        payload): a second pass re-attempts the claim.
+
+    Admitted packets (first ``budget`` in arrival order) detour into the
+    lane instead of forwarding — one extra step of latency; denied
+    candidates forward as-is (the paper's ENB=0 fallback) and are counted
+    by the caller via the returned ``n_denied``.
+
+    Returns ``(forwarded, lane, n_denied)`` where ``lane`` is a
+    ``budget``-row PacketBatch (dead rows beyond the admitted count).
+    """
+    cont = out.alive & out.pp_valid & (out.pp_enb == 1) & (out.payload_len > 0)
+    retry = out.alive & out.pp_valid & (out.pp_enb == 0) & \
+        (out.payload_len >= cfg.min_park_len)
+    cand = cont | retry
+    pos = jnp.cumsum(cand) - 1
+    admit = cand & (pos < budget)
+    b = out.alive.shape[0]
+    # Invert: lane_src[pos] = row index; empty lane slots gather a dead row.
+    dest = jnp.where(admit, pos, budget)
+    lane_src = jnp.full((budget,), b, jnp.int32)
+    lane_src = lane_src.at[dest].set(jnp.arange(b, dtype=jnp.int32),
+                                     mode="drop")
+    lane = gather_rows(out, lane_src)
+    forwarded = out.replace(alive=out.alive & ~admit)
+    return forwarded, lane, jnp.sum(cand & ~admit)
+
+
+def _cat_rows(a: PacketBatch, b: PacketBatch) -> PacketBatch:
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
 def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
-                explicit_drops: bool, use_kernel: bool, collect_sent: bool):
-    """Single-pipe scan body: trace (T+window, chunk, ...) -> ys + final."""
+                explicit_drops: bool, use_kernel: bool, collect_sent: bool,
+                recirc: int):
+    """Single-pipe scan body: trace (T+pad, chunk, ...) -> ys + final.
+
+    ``recirc`` is the recirculation-lane width (0 = lane off; the step body
+    is then exactly the seed timeline, keeping the bit-exactness oracle)."""
 
     def run(trace: PacketBatch):
         # All-dead chunks are all-zeros in every field (alive=False == 0),
-        # so a zeros ring is a ring of dead chunks.
+        # so a zeros ring is a ring of dead chunks.  With a recirculation
+        # lane the NF-bound chunks are ``recirc`` rows wider.
         ring = jax.tree.map(
-            lambda a: jnp.zeros((max(window, 1),) + a.shape[1:], a.dtype),
+            lambda a: jnp.zeros(
+                (max(window, 1), a.shape[1] + recirc) + a.shape[2:], a.dtype),
             trace)
-        carry0 = (init_state(cfg), chain.init_state(), ring,
+        lane0 = jax.tree.map(
+            lambda a: jnp.zeros((recirc,) + a.shape[2:], a.dtype),
+            trace) if recirc else ()
+        carry0 = (init_state(cfg), chain.init_state(), ring, lane0,
                   jnp.zeros((), jnp.int32))
 
         def step(carry, cin):
-            state, cstates, ring, t = carry
+            state, cstates, ring, lane, t = carry
             wire_b = _alive_bytes(cin)
+            if recirc:
+                # Second pass for packets re-injected at the previous step
+                # (their wire bytes were paid on first arrival).
+                state, rout = recirc_fn(cfg, state, lane,
+                                        use_kernel=use_kernel)
             state, out = split_fn(cfg, state, cin, use_kernel=use_kernel)
-            srv_b = _alive_bytes(out)
-            cstates, nf_out, dropped, _cycles = chain.run(cstates, out)
+            if recirc:
+                out, lane, n_denied = recirc_select(cfg, out, recirc)
+                state = dataclasses.replace(
+                    state, counters=C.bump(state.counters,
+                                           "recirc_budget_drops", n_denied))
+                nf_in = _cat_rows(rout, out)
+            else:
+                nf_in = out
+            srv_fwd_b = _alive_bytes(nf_in)
+            cstates, nf_out, dropped, _cycles = chain.run(cstates, nf_in)
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
             if window == 0:
@@ -113,16 +209,16 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
                 ring = jax.tree.map(
                     lambda r, v: jax.lax.dynamic_update_index_in_dim(
                         r, v, slot, axis=0), ring, nf_out)
-            srv_fwd_b = srv_b
-            srv_b = srv_b + _alive_bytes(returning)
+            srv_b = srv_fwd_b + _alive_bytes(returning)
             state, m = merge_fn(cfg, state, returning, use_kernel=use_kernel)
             ys = dict(merged=m, wire_b=wire_b, srv_b=srv_b,
-                      srv_fwd_b=srv_fwd_b)
+                      srv_fwd_b=srv_fwd_b, ret_b=_alive_bytes(m),
+                      occ=occupancy(state))
             if collect_sent:
-                ys["sent"] = out
-            return (state, cstates, ring, t + 1), ys
+                ys["sent"] = nf_in
+            return (state, cstates, ring, lane, t + 1), ys
 
-        (state, _, _, _), ys = jax.lax.scan(step, carry0, trace)
+        (state, _, _, _, _), ys = jax.lax.scan(step, carry0, trace)
         return state, ys
 
     return run
@@ -131,9 +227,9 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
 @lru_cache(maxsize=None)
 def _compiled(cfg: ParkConfig, chain: Chain, window: int,
               explicit_drops: bool, use_kernel: bool, collect_sent: bool,
-              pipes: bool):
+              pipes: bool, recirc: int):
     run = _build_scan(cfg, chain, window, explicit_drops, use_kernel,
-                      collect_sent)
+                      collect_sent, recirc)
     if pipes:
         run = jax.vmap(run)
     return jax.jit(run)
@@ -171,7 +267,9 @@ def _finalize(ys: dict, window: int, collect_sent: bool, time_axis: int):
     wire = np.asarray(ys["wire_b"], np.int64).sum()
     srv = np.asarray(ys["srv_b"], np.int64).sum()
     srv_fwd = np.asarray(ys["srv_fwd_b"], np.int64).sum()
-    return merged, sent, int(wire), int(srv), int(srv_fwd)
+    ret = np.asarray(ys["ret_b"], np.int64).sum()
+    occ = np.asarray(ys["occ"], np.int64).max() if ys["occ"].size else 0
+    return merged, sent, int(wire), int(srv), int(srv_fwd), int(ret), int(occ)
 
 
 def run_engine(
@@ -187,17 +285,23 @@ def run_engine(
 
     Bit-identical to ``simulate.simulate_loop`` on the same trace (the seed
     Python loop), but the whole timeline is a single compiled program.
+    With ``cfg.recirculation`` the trace is padded one extra step so the
+    recirculation lane drains, and NF-bound chunks gain ``recirc_slots``
+    leading lane rows.
     """
-    trace = _pad_trace(trace, window, axis=0)
+    chunk = jax.tree.leaves(trace)[0].shape[1]
+    lane = recirc_slots(cfg, chunk)
+    trace = _pad_trace(trace, window + (1 if lane else 0), axis=0)
     fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
-                   collect_sent, pipes=False)
+                   collect_sent, pipes=False, recirc=lane)
     state, ys = fn(trace)
-    merged, sent, wire, srv, srv_fwd = _finalize(ys, window, collect_sent,
-                                                 time_axis=0)
+    merged, sent, wire, srv, srv_fwd, ret, occ = _finalize(
+        ys, window, collect_sent, time_axis=0)
     return EngineResult(
         merged=merged, sent=sent, state=state,
         counters=C.as_dict(state.counters),
         srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
+        ret_bytes=ret, peak_occupancy=occ,
     )
 
 
@@ -217,12 +321,14 @@ def run_pipes(
     of them.  Byte totals and counters are aggregated across pipes.
     """
     n_pipes = jax.tree.leaves(traces)[0].shape[0]
-    traces = _pad_trace(traces, window, axis=1)
+    chunk = jax.tree.leaves(traces)[0].shape[2]
+    lane = recirc_slots(cfg, chunk)
+    traces = _pad_trace(traces, window + (1 if lane else 0), axis=1)
     fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
-                   collect_sent, pipes=True)
+                   collect_sent, pipes=True, recirc=lane)
     state, ys = fn(traces)
-    merged, sent, wire, srv, srv_fwd = _finalize(ys, window, collect_sent,
-                                                 time_axis=1)
+    merged, sent, wire, srv, srv_fwd, ret, occ = _finalize(
+        ys, window, collect_sent, time_axis=1)
     per_wire = np.asarray(ys["wire_b"], np.int64).sum(axis=-1)
     per_srv = np.asarray(ys["srv_b"], np.int64).sum(axis=-1)
     ctr = np.asarray(state.counters, np.int64)  # (P, C.NUM)
@@ -232,6 +338,7 @@ def run_pipes(
     return PipesResult(
         merged=merged, sent=sent, state=state,
         counters=agg, srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
+        ret_bytes=ret, peak_occupancy=occ,
         per_pipe_counters=per_pipe,
         per_pipe_srv_bytes=[int(v) for v in per_srv],
         per_pipe_wire_bytes=[int(v) for v in per_wire],
@@ -241,16 +348,33 @@ def run_pipes(
 def goodput_gain(res: EngineResult) -> dict[str, Any]:
     """Server-link byte saving vs the non-parking baseline.
 
-    Baseline carries every packet whole in BOTH directions (to and from the
-    NF server): ``2 * wire_bytes``.  Parking carries headers + un-parked
-    tails + the 7-byte PP header.  Positive saving = goodput gain on the
-    switch<->server link (the paper's §6.1 metric, byte form).
+    Parking carries headers + un-parked tails + the 7-byte PP header
+    (``srv_bytes``, both directions as measured).  Two baselines:
+
+    * **drop-aware** (the headline ``goodput_gain``): forward trip carries
+      every offered packet whole (``wire_bytes``); the return trip only the
+      NF-chain survivors at full size (``ret_bytes``).  A no-parking
+      deployment of the same chain drops the same packets server-side, so
+      this is the byte count it would actually put on the link.  (Exact up
+      to premature-eviction losses, which kill packets the baseline would
+      have returned; in healthy operation those are zero.)
+    * **naive** (``*_naive``, the seed formula): ``2 * wire_bytes`` — it
+      pretends the chain-dropped packets made the return trip too, padding
+      the baseline with bytes no deployment would carry and skewing the
+      gain whenever the chain drops (e.g. NAT overflow, firewall rules).
+
+    Positive saving = goodput gain on the switch<->server link (the
+    paper's §6.1 metric, byte form).
     """
-    baseline = 2 * res.wire_bytes
-    saving = 1.0 - res.srv_bytes / baseline if baseline else 0.0
+    naive = 2 * res.wire_bytes
+    baseline = res.wire_bytes + res.ret_bytes
+    srv = res.srv_bytes
     return dict(
         baseline_link_bytes=baseline,
-        parked_link_bytes=res.srv_bytes,
-        link_byte_saving=saving,
-        goodput_gain=(baseline / res.srv_bytes - 1.0) if res.srv_bytes else 0.0,
+        baseline_naive_link_bytes=naive,
+        parked_link_bytes=srv,
+        link_byte_saving=1.0 - srv / baseline if baseline else 0.0,
+        link_byte_saving_naive=1.0 - srv / naive if naive else 0.0,
+        goodput_gain=(baseline / srv - 1.0) if srv else 0.0,
+        goodput_gain_naive=(naive / srv - 1.0) if srv else 0.0,
     )

@@ -43,7 +43,7 @@ class ServerModel:
     overhead_cycles: float = 60.0    # DPDK rx/tx + framework per packet
     framework_mpps: float = 17.5     # ONVM manager rx/tx core packet cap
     base_latency_us: float = 28.0    # wire + switch + DPDK baseline (Fig. 7)
-    recirc_latency_us: float = 0.05  # per-recirculation penalty (§6.2.5)
+    recirc_latency_us: float = 0.05  # one extra pipeline traversal (§6.2.5)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,34 +54,47 @@ class TrafficDigest:
     ``mean_srv_bytes``:  average bytes/packet on the switch->server link
                           (equals wire bytes in baseline; reduced by parking).
     ``park_fraction``:   fraction of packets parked (ENB=1).
+    ``recirc_per_pkt``:  expected recirculation passes per packet (§6.2.5);
+                          0 without recirculation.  Feeds the per-packet
+                          expected-passes latency term in ``evaluate``.
     """
 
     mean_wire_bytes: float
     mean_srv_bytes: float
     park_fraction: float
+    recirc_per_pkt: float = 0.0
 
 
 def digest(sizes, probs, park_bytes: int, min_park_len: int,
-           parking: bool) -> TrafficDigest:
-    """Compute the per-packet byte averages for a size distribution."""
+           parking: bool, pass_bytes: int | None = None) -> TrafficDigest:
+    """Compute the per-packet byte averages for a size distribution.
+
+    ``pass_bytes`` models recirculation (§6.2.5): one pipeline traversal
+    parks at most ``pass_bytes``; a packet whose parked share exceeds it
+    takes one recirculation pass to fill the remaining row width (the
+    engine's single-recirculation model, DESIGN.md §6)."""
     mean_wire = float(sum(s * p for s, p in zip(sizes, probs)))
     if not parking:
         return TrafficDigest(mean_wire, mean_wire, 0.0)
     srv = 0.0
     park_frac = 0.0
+    recirc = 0.0
     for s, p in zip(sizes, probs):
         payload = s - HDR_BYTES
         if payload >= min_park_len:
             parked = min(payload, park_bytes)
             srv += p * (s - parked + PP_HDR_BYTES)
             park_frac += p
+            if pass_bytes is not None and parked > pass_bytes:
+                recirc += p
         else:
             srv += p * (s + PP_HDR_BYTES)
-    return TrafficDigest(mean_wire, srv, park_frac)
+    return TrafficDigest(mean_wire, srv, park_frac, recirc)
 
 
 def measured_digest(n_pkts: int, wire_bytes: int, srv_fwd_bytes: int,
-                    park_fraction: float) -> TrafficDigest:
+                    park_fraction: float,
+                    recirc_per_pkt: float = 0.0) -> TrafficDigest:
     """TrafficDigest from the scanned engine's measured byte totals.
 
     ``srv_fwd_bytes`` is the engine's switch->server direction alone
@@ -92,12 +105,15 @@ def measured_digest(n_pkts: int, wire_bytes: int, srv_fwd_bytes: int,
     between the stateful simulation and the analytic model: feed the
     measured digest to ``evaluate``/``peak_goodput`` to predict rates for
     the traffic actually simulated, hash skew, eviction losses and all.
+    ``recirc_per_pkt`` is the measured rate ``counters['recirculations'] /
+    packets`` when the engine ran with the recirculation lane.
     """
     n = max(n_pkts, 1)
     return TrafficDigest(
         mean_wire_bytes=wire_bytes / n,
         mean_srv_bytes=srv_fwd_bytes / n,
         park_fraction=park_fraction,
+        recirc_per_pkt=recirc_per_pkt,
     )
 
 
@@ -114,7 +130,7 @@ class OperatingPoint:
 
 
 def evaluate(m: ServerModel, d: TrafficDigest, nf_cycles,
-             send_gbps: float, recirculation: bool = False) -> OperatingPoint:
+             send_gbps: float) -> OperatingPoint:
     """Evaluate one send rate; drops appear when any resource saturates.
 
     ``nf_cycles``: per-NF per-packet CPU cycle costs.  OpenNetVM pins each NF
@@ -145,8 +161,11 @@ def evaluate(m: ServerModel, d: TrafficDigest, nf_cycles,
     queue_us = rho / (2.0 * (1.0 - rho)) * service_us
     queue_us = min(queue_us, 2000.0)  # queue bound ~ buffer-limited
     latency = m.base_latency_us + queue_us
-    if recirculation:
-        latency += m.recirc_latency_us
+    # Recirculation: each pass is one extra traversal of the ingress
+    # pipeline.  Expected-passes term (analytic from digest(), or measured
+    # from the engine's recirculations counter) replaces the old flat
+    # constant that charged every workload the same penalty.
+    latency += m.recirc_latency_us * d.recirc_per_pkt
 
     pcie_used = pps_delivered * d.mean_srv_bytes * 8 / 1e9
     return OperatingPoint(send_gbps, pps_delivered, goodput, latency,
@@ -156,7 +175,6 @@ def evaluate(m: ServerModel, d: TrafficDigest, nf_cycles,
 def peak_goodput(m: ServerModel, d: TrafficDigest, nf_cycles,
                  table_capacity: int = 0, max_exp: int = 1,
                  nf_latency_us: float = 30.0, parking: bool = False,
-                 recirculation: bool = False,
                  healthy_drop: float = 0.001) -> OperatingPoint:
     """Largest send rate with drop rate < 0.1 % and no premature evictions.
 
@@ -168,7 +186,7 @@ def peak_goodput(m: ServerModel, d: TrafficDigest, nf_cycles,
     lo, hi = 0.01, 200.0
     for _ in range(60):
         mid = 0.5 * (lo + hi)
-        op = evaluate(m, d, nf_cycles, mid, recirculation)
+        op = evaluate(m, d, nf_cycles, mid)
         healthy = op.drop_rate <= healthy_drop
         if parking and table_capacity > 0 and d.park_fraction > 0:
             pps_parked = op.pps * d.park_fraction
@@ -178,7 +196,7 @@ def peak_goodput(m: ServerModel, d: TrafficDigest, nf_cycles,
             lo = mid
         else:
             hi = mid
-    return evaluate(m, d, nf_cycles, lo, recirculation)
+    return evaluate(m, d, nf_cycles, lo)
 
 
 def scale_pipes(op: OperatingPoint, pipes: int) -> OperatingPoint:

@@ -48,28 +48,39 @@ def _blocks(nbytes: int) -> int:
     return math.ceil(nbytes / SRAM_BLOCK_BYTES)
 
 
-def utilization(cfg: ParkConfig, nf_servers: int = 1) -> Utilization:
-    """Resource usage for ``nf_servers`` sharing one pipe's MAU (paper §6.2.3
-    statically slices the reserved memory among servers on the same pipe)."""
-    m = cfg.capacity  # slots per server slice
-    per_stage_blocks = [0] * STAGES_PER_PIPE
+def _placement(capacity: int, banks: int, nf_servers: int) -> list[int]:
+    """Per-stage SRAM blocks for one PayloadPark layout.
 
+    Single source of truth shared by the forward model (``utilization``)
+    and the Fig. 14 inversion (``capacity_for_memory_fraction``) so the two
+    stay mutually consistent — register arrays consume whole 16 KB blocks,
+    replicated per server slice (§6.2.3).
+    """
+    per_stage_blocks = [0] * STAGES_PER_PIPE
     # Stage 1: tagger registers (TI + CLK, 2 x 2B) — negligible, 1 block.
     per_stage_blocks[0] += 1
     # Stage 2: metadata table: EXP(2B) + CLK(2B) + LEN(2B) per slot.
-    per_stage_blocks[1] += _blocks(m * 6) * nf_servers
+    per_stage_blocks[1] += _blocks(capacity * 6) * nf_servers
     # Stages 3..N: payload banks, BLOCK_BYTES-wide register arrays striped
     # across the remaining stages (Fig. 4).  Two arrays per stage is typical
     # (two MATs can share a stage when resources allow, §4).
-    banks = cfg.banks
     banks_per_stage = 2
     stage = 2
     placed = 0
     while placed < banks:
         k = min(banks_per_stage, banks - placed)
-        per_stage_blocks[stage % STAGES_PER_PIPE] += _blocks(m * BLOCK_BYTES) * k * nf_servers
+        per_stage_blocks[stage % STAGES_PER_PIPE] += \
+            _blocks(capacity * BLOCK_BYTES) * k * nf_servers
         placed += k
         stage += 1
+    return per_stage_blocks
+
+
+def utilization(cfg: ParkConfig, nf_servers: int = 1) -> Utilization:
+    """Resource usage for ``nf_servers`` sharing one pipe's MAU (paper §6.2.3
+    statically slices the reserved memory among servers on the same pipe)."""
+    per_stage_blocks = _placement(cfg.capacity, cfg.banks, nf_servers)
+    banks = cfg.banks
 
     pcts = [100.0 * b / SRAM_BLOCKS_PER_STAGE for b in per_stage_blocks]
     used = [p for p in pcts if p > 0]
@@ -93,9 +104,34 @@ def utilization(cfg: ParkConfig, nf_servers: int = 1) -> Utilization:
     )
 
 
-def capacity_for_memory_fraction(frac: float, cfg: ParkConfig) -> int:
-    """Invert the model: table slots affordable with ``frac`` of pipe SRAM
-    (paper Fig. 14 sweeps 'percentage of reserved memory')."""
+def capacity_for_memory_fraction(frac: float, cfg: ParkConfig,
+                                 nf_servers: int = 1) -> int:
+    """Invert the model: the largest table capacity whose *placed* SRAM cost
+    fits in ``frac`` of one pipe's SRAM (paper Fig. 14 sweeps 'percentage of
+    reserved memory').
+
+    Uses the same ``_placement`` as ``utilization`` — whole 16 KB blocks
+    per register array, replicated per server slice — so the inversion
+    round-trips against the forward model exactly (the seed divided the
+    budget by raw per-slot bytes and ignored both effects, overstating the
+    affordable capacity).
+    """
     budget = frac * PIPE_SRAM_BYTES
-    per_slot = 6 + cfg.park_bytes  # metadata + payload bytes
-    return int(budget / per_slot)
+
+    def cost(m: int) -> int:
+        return sum(_placement(m, cfg.banks, nf_servers)) * SRAM_BLOCK_BYTES
+
+    if cost(0) > budget:  # fixed tagger overhead alone does not fit
+        return 0
+    hi = 1
+    while cost(hi) <= budget and hi < PIPE_SRAM_BYTES:
+        hi *= 2
+    lo = hi // 2 if hi > 1 else 0
+    # invariant: cost(lo) <= budget < cost(hi)
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if cost(mid) <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return lo

@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import counters as C
-from repro.core.packet import PacketBatch, to_time_major
-from repro.core.park import ParkConfig, ParkState, init_state, merge, split
+from repro.core.packet import PacketBatch, dead_batch, to_time_major
+from repro.core.park import (ParkConfig, ParkState, init_state, merge, recirc,
+                             split)
 from repro.nf.chain import Chain, to_explicit_drops
 from repro.switchsim import engine as engine_mod
 
@@ -46,6 +47,7 @@ class SimResult:
     counters: dict
     srv_bytes: int          # total bytes switch->server (goodput accounting)
     wire_bytes: int         # total bytes generator->switch
+    ret_bytes: int          # bytes the merge stage put back on the wire
 
 def _chunks(pkts: PacketBatch, chunk: int):
     n = pkts.batch_size
@@ -76,7 +78,7 @@ def simulate(
     res = engine_mod.run_engine(
         cfg, chain, trace, window=window, explicit_drops=explicit_drops,
         use_kernel=use_kernel, collect_sent=True)
-    t = trace.src_ip.shape[0]
+    t = res.merged.src_ip.shape[0]  # == trace steps (+1 recirc drain step)
     merged = [jax.tree.map(lambda a: a[i], res.merged) for i in range(t)]
     sent = [jax.tree.map(lambda a: a[i], res.sent) for i in range(t)]
     return SimResult(
@@ -86,6 +88,7 @@ def simulate(
         counters=res.counters,
         srv_bytes=res.srv_bytes,
         wire_bytes=res.wire_bytes,
+        ret_bytes=res.ret_bytes,
     )
 
 
@@ -102,8 +105,13 @@ def simulate_loop(
 
     One jitted dispatch per chunk per operation plus a device->host sync for
     every byte tally — the dispatch overhead the scanned engine removes.
-    Kept as the behavioural oracle for ``simulate()`` / the engine.
+    Kept as the behavioural oracle for ``simulate()`` / the engine; with
+    ``cfg.recirculation`` it mirrors the engine's recirculation lane
+    host-side (``_simulate_loop_recirc``) and stays the oracle there too.
     """
+    if engine_mod.recirc_slots(cfg, chunk) > 0:
+        return _simulate_loop_recirc(cfg, chain, pkts, window, chunk,
+                                     explicit_drops, use_kernel)
     state = init_state(cfg)
     chain_states = chain.init_state()
     inflight: list = []
@@ -111,6 +119,7 @@ def simulate_loop(
     sent: list = []
     srv_bytes = 0
     wire_bytes = 0
+    ret_bytes = 0
 
     todo = _chunks(pkts, chunk)
     steps = len(todo) + window
@@ -131,6 +140,7 @@ def simulate_loop(
                 jnp.sum(jnp.where(returning.alive, returning.pkt_len(), 0)))
             state, m = merge(cfg, state, returning, use_kernel=use_kernel)
             merged.append(m)
+            ret_bytes += int(jnp.sum(jnp.where(m.alive, m.pkt_len(), 0)))
 
     return SimResult(
         merged=merged,
@@ -139,6 +149,69 @@ def simulate_loop(
         counters=C.as_dict(state.counters),
         srv_bytes=srv_bytes,
         wire_bytes=wire_bytes,
+        ret_bytes=ret_bytes,
+    )
+
+
+def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
+                          use_kernel):
+    """Host-side mirror of the engine's recirculation timeline (DESIGN.md
+    §6): same op order (recirc pass, Split, budget admission, NF, ring,
+    Merge), same lane width, one drain step — kept as the executable oracle
+    for the scanned engine with recirculation on."""
+
+    def alive_bytes(p):
+        return int(jnp.sum(jnp.where(p.alive, p.pkt_len(), 0)))
+
+    state = init_state(cfg)
+    chain_states = chain.init_state()
+    lane_w = engine_mod.recirc_slots(cfg, chunk)
+    lane = dead_batch(lane_w, cfg.pmax)
+    todo = _chunks(pkts, chunk)
+    n_real = len(todo)
+    dead_in = dead_batch(chunk, cfg.pmax)
+    ring = [dead_batch(chunk + lane_w, cfg.pmax)
+            for _ in range(max(window, 1))]
+    merged: list = []
+    sent: list = []
+    srv_bytes = wire_bytes = ret_bytes = 0
+
+    for t in range(n_real + window + 1):
+        cin = todo[t] if t < n_real else dead_in
+        wire_bytes += alive_bytes(cin)
+        state, rout = recirc(cfg, state, lane, use_kernel=use_kernel)
+        state, out = split(cfg, state, cin, use_kernel=use_kernel)
+        out, lane, n_denied = engine_mod.recirc_select(cfg, out, lane_w)
+        state = dataclasses.replace(
+            state, counters=C.bump(state.counters, "recirc_budget_drops",
+                                   n_denied))
+        nf_in = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), rout, out)
+        if t <= n_real:
+            sent.append(nf_in)
+        srv_bytes += alive_bytes(nf_in)
+        chain_states, nf_out, dropped, _cycles = chain.run(chain_states, nf_in)
+        if explicit_drops:
+            nf_out = to_explicit_drops(nf_out, dropped)
+        if window == 0:
+            returning = nf_out
+        else:
+            slot = t % window
+            returning = ring[slot]
+            ring[slot] = nf_out
+        srv_bytes += alive_bytes(returning)
+        state, m = merge(cfg, state, returning, use_kernel=use_kernel)
+        if t >= window:
+            merged.append(m)
+        ret_bytes += alive_bytes(m)
+
+    return SimResult(
+        merged=merged,
+        state=state,
+        sent_to_server=sent,
+        counters=C.as_dict(state.counters),
+        srv_bytes=srv_bytes,
+        wire_bytes=wire_bytes,
+        ret_bytes=ret_bytes,
     )
 
 

@@ -13,7 +13,7 @@ from repro.core.header import crc16_tag
 from repro.core.packet import (HDR_BYTES, OP_DROP, PP_HDR_BYTES,
                                make_udp_batch, wire_bytes)
 from repro.core.park import (PARK_BYTES_BASE, PARK_BYTES_RECIRC, ParkConfig,
-                             init_state, merge, occupancy, split)
+                             init_state, merge, occupancy, recirc, split)
 
 CFG = ParkConfig(capacity=64, max_exp=2, pmax=1024)
 
@@ -135,13 +135,20 @@ class TestMerge:
 
 
 class TestRecirculation:
-    def test_recirc_parks_352(self):
+    """Pass-based recirculation (paper §6.2.5, DESIGN.md §6): Split parks
+    one pass width (160B); ``recirc`` is the second traversal that fills
+    the 352B row.  The full lane/budget suite is tests/test_recirc.py."""
+
+    def test_recirc_parks_352_over_two_passes(self):
         cfg = ParkConfig(capacity=64, max_exp=2, pmax=1024,
                          recirculation=True)
         assert cfg.park_bytes == PARK_BYTES_RECIRC == 352
+        assert cfg.pass_bytes == PARK_BYTES_BASE == 160
         st_ = init_state(cfg)
         pkts = mk(0, 8, 500)   # payload 458 >= 160
         st_, sent = split(cfg, st_, pkts)
+        assert jnp.all(sent.payload_len == pkts.payload_len - 160)
+        st_, sent = recirc(cfg, st_, sent)
         assert jnp.all(sent.payload_len == pkts.payload_len - 352)
         st_, out = merge(cfg, st_, sent)
         w0, _ = wire_bytes(pkts)
@@ -149,13 +156,15 @@ class TestRecirculation:
         assert jnp.all(w0 == w1)
 
     def test_recirc_partial_park(self):
-        """Payload in [160, 352): the whole payload parks (variable length,
-        DESIGN.md deviation note)."""
+        """Payload in [160, 352): the whole payload parks after the second
+        pass (variable length, DESIGN.md deviation note)."""
         cfg = ParkConfig(capacity=64, max_exp=2, pmax=1024,
                          recirculation=True)
         st_ = init_state(cfg)
         pkts = mk(0, 8, HDR_BYTES + 200)
         st_, sent = split(cfg, st_, pkts)
+        assert jnp.all(sent.payload_len == 200 - 160)
+        st_, sent = recirc(cfg, st_, sent)
         assert jnp.all(sent.payload_len == 0)
         st_, out = merge(cfg, st_, sent)
         w0, _ = wire_bytes(pkts)

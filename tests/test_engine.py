@@ -32,6 +32,7 @@ def _assert_same_result(a, b):
     assert a.counters == b.counters
     assert a.srv_bytes == b.srv_bytes
     assert a.wire_bytes == b.wire_bytes
+    assert a.ret_bytes == b.ret_bytes
     np.testing.assert_array_equal(np.asarray(a.state.ptable),
                                   np.asarray(b.state.ptable))
 
@@ -153,3 +154,5 @@ class TestMultiPipe:
         g = E.goodput_gain(res)
         # 512B packets park 160B and add 7B: saving = (160-7)/512 per hop
         assert abs(g["link_byte_saving"] - (160 - 7) / 512) < 0.01
+        # MacSwap drops nothing: drop-aware and naive baselines coincide
+        assert g["baseline_link_bytes"] == g["baseline_naive_link_bytes"]

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.packet import make_udp_batch
 from repro.nf.chain import Chain, to_explicit_drops
@@ -60,6 +61,45 @@ class TestNat:
         st, out2, _, _ = nat(st, p)  # same flows again
         np.testing.assert_array_equal(np.asarray(out1.src_port),
                                       np.asarray(out2.src_port))
+
+    def test_ports_stay_in_uint16_range_under_churn(self):
+        """Regression: the seed's monotonic port counter overflowed 65535
+        after enough flows.  Ports are now slot-owned and bounded."""
+        nat = Nat(capacity=64, base_port=65400, max_exp=1)
+        st = nat.init_state()
+        top = 65400 + 64 - 1
+        assert top <= 65535
+        last_mapped = 0
+        for r in range(10):  # 640 distinct flows through 64 slots
+            p = mk(key=100 + r, n=64)
+            st, out, drop, _ = nat(st, p)
+            ok = ~np.asarray(drop)
+            ports = np.asarray(out.src_port)[ok]
+            assert ports.min() >= 65400 and ports.max() <= top
+            last_mapped = int(ok.sum())
+        # expiry keeps reclaiming slots: churn never starves permanently
+        assert last_mapped > 0
+
+    def test_port_space_overflow_rejected(self):
+        with pytest.raises(ValueError):
+            Nat(capacity=1 << 14, base_port=60000)  # tops out past 65535
+        with pytest.raises(ValueError):
+            Nat(capacity=4)  # below probe depth
+
+    def test_flow_expiry_reclaims_slots(self):
+        """A full table ages under failed inserts (EXP-style); new flows
+        eventually claim the expired slots instead of dropping forever."""
+        nat = Nat(capacity=8, base_port=10000, max_exp=1)
+        st = nat.init_state()
+        p1 = mk(key=200, n=8)
+        st, _, drop1, _ = nat(st, p1)
+        assert not bool(drop1.any())          # 8 flows fill all 8 slots
+        p2 = mk(key=201, n=8)                 # 8 fresh flows, table full
+        st, _, drop2, _ = nat(st, p2)
+        st, out3, drop3, _ = nat(st, p2)      # aged slots now reclaimable
+        assert int(np.asarray(drop3).sum()) < int(np.asarray(drop2).sum())
+        ports = np.asarray(out3.src_port)[~np.asarray(drop3)]
+        assert ports.min() >= 10000 and ports.max() <= 10007
 
 
 class TestMaglev:

@@ -83,6 +83,31 @@ class TestEvaluate:
         assert park.goodput_gbps / base.goodput_gbps < 1.02
 
 
+class TestRecircLatency:
+    def test_expected_passes_term(self):
+        """Latency charges recirc_latency_us per expected pass, not a flat
+        constant."""
+        m = ServerModel()
+        base = TrafficDigest(500.0, 300.0, 1.0, recirc_per_pkt=0.0)
+        two = TrafficDigest(500.0, 300.0, 1.0, recirc_per_pkt=2.0)
+        l0 = evaluate(m, base, [50.0], 5.0).latency_us
+        l2 = evaluate(m, two, [50.0], 5.0).latency_us
+        assert l2 - l0 == pytest.approx(2 * m.recirc_latency_us)
+
+    def test_digest_counts_second_pass_packets(self):
+        """352B parking with a 160B pass width: every parked packet wider
+        than one pass takes exactly one recirculation (DESIGN.md §6)."""
+        d = digest([512], [1.0], 352, 160, True, pass_bytes=160)
+        assert d.recirc_per_pkt == pytest.approx(1.0)
+        assert d.mean_srv_bytes == pytest.approx(512 - 352 + 7)
+        # payload below the pass width: no recirculation needed
+        d2 = digest([160 + 42], [1.0], 352, 160, True, pass_bytes=160)
+        assert d2.recirc_per_pkt == 0.0
+        # and no pass model -> no term
+        d3 = digest([512], [1.0], 352, 160, True)
+        assert d3.recirc_per_pkt == 0.0
+
+
 class TestResources:
     def test_table1_band(self):
         """Resource model lands in the paper's Table 1 band: avg SRAM ~26%/
@@ -98,5 +123,27 @@ class TestResources:
     def test_capacity_memory_inversion(self):
         cfg = ParkConfig()
         slots = resources.capacity_for_memory_fraction(0.26, cfg)
-        # 26% of a 15.36MB pipe at 166B/slot ~= 24k slots
+        # 26% of a 15.36MB pipe at ~166B/slot, block-rounded ~= 23.5k slots
         assert 15_000 < slots < 30_000
+
+    @pytest.mark.parametrize("frac", [0.10, 0.26, 0.40])
+    @pytest.mark.parametrize("servers", [1, 2])
+    def test_inversion_roundtrips_against_forward_model(self, frac, servers):
+        """Fig. 14 inversion must agree with utilization(): the returned
+        capacity is the largest whose block-placed cost fits the budget."""
+        cfg = ParkConfig()
+        budget = frac * resources.PIPE_SRAM_BYTES
+        c = resources.capacity_for_memory_fraction(frac, cfg, servers)
+        assert c > 0
+        fits = resources.utilization(
+            ParkConfig(capacity=c), nf_servers=servers).sram_bytes
+        over = resources.utilization(
+            ParkConfig(capacity=c + 1), nf_servers=servers).sram_bytes
+        assert fits <= budget < over
+
+    def test_recirc_rows_cost_more_sram(self):
+        """352B rows need ~2.2x the banks of 160B rows."""
+        c160 = resources.capacity_for_memory_fraction(0.26, ParkConfig())
+        c352 = resources.capacity_for_memory_fraction(
+            0.26, ParkConfig(recirculation=True))
+        assert c352 < c160

@@ -1,0 +1,281 @@
+"""Recirculation subsystem (paper §6.2.5, DESIGN.md §6): core second-pass
+ops, the engine's recirculation lane + port budget, and the accounting
+fixes that ride along (drop-aware goodput baseline, merge-width clamp,
+config validation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters as C
+from repro.core.packet import (HDR_BYTES, make_udp_batch, to_time_major,
+                               wire_bytes)
+from repro.core.park import (PARK_BYTES_BASE, PARK_BYTES_RECIRC, ParkConfig,
+                             init_state, merge, recirc, split)
+from repro.nf.chain import Chain
+from repro.nf.firewall import Firewall
+from repro.nf.macswap import MacSwap
+from repro.nf.nat import Nat
+from repro.switchsim import engine as E
+from repro.switchsim.simulate import simulate, simulate_loop
+from repro.traffic.generator import enterprise, fixed
+
+
+def mk(key, n, size, pmax=1024):
+    return make_udp_batch(jax.random.key(key), n, size, pmax=pmax)
+
+
+def _cat(batches):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *batches)
+
+
+def _assert_same_result(a, b):
+    """Wire-level + accounting equality of two SimResults."""
+    ga, la = wire_bytes(_cat(a.merged))
+    gb, lb = wire_bytes(_cat(b.merged))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    sa, _ = wire_bytes(_cat(a.sent_to_server))
+    sb, _ = wire_bytes(_cat(b.sent_to_server))
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    assert a.counters == b.counters
+    assert a.srv_bytes == b.srv_bytes
+    assert a.wire_bytes == b.wire_bytes
+    assert a.ret_bytes == b.ret_bytes
+
+
+class TestSecondPass:
+    """core.park.recirc_fn: continuation + retry semantics."""
+
+    def test_two_passes_park_352(self):
+        cfg = ParkConfig(capacity=64, max_exp=2, pmax=1024,
+                         recirculation=True)
+        assert cfg.park_bytes == PARK_BYTES_RECIRC == 352
+        assert cfg.pass_bytes == PARK_BYTES_BASE == 160
+        st = init_state(cfg)
+        pkts = mk(0, 8, 500)  # payload 458
+        st, sent = split(cfg, st, pkts)
+        # first pass parks exactly pass_bytes
+        assert jnp.all(sent.payload_len == pkts.payload_len - 160)
+        st, rec = recirc(cfg, st, sent)
+        assert jnp.all(rec.payload_len == pkts.payload_len - 352)
+        # tag unchanged across the second pass
+        np.testing.assert_array_equal(np.asarray(rec.pp_ti),
+                                      np.asarray(sent.pp_ti))
+        np.testing.assert_array_equal(np.asarray(rec.pp_crc),
+                                      np.asarray(sent.pp_crc))
+        assert C.as_dict(st.counters)["recirculations"] == 8
+        st, out = merge(cfg, st, rec)
+        w0, l0 = wire_bytes(pkts)
+        w1, l1 = wire_bytes(out)
+        assert jnp.all(w0 == w1) and jnp.all(l0 == l1)
+
+    def test_partial_second_pass_parks_whole_payload(self):
+        """Payload in (160, 352): the remainder parks entirely."""
+        cfg = ParkConfig(capacity=64, max_exp=2, pmax=1024,
+                         recirculation=True)
+        st = init_state(cfg)
+        pkts = mk(1, 4, HDR_BYTES + 200)
+        st, sent = split(cfg, st, pkts)
+        st, rec = recirc(cfg, st, sent)
+        assert jnp.all(rec.payload_len == 0)
+        st, out = merge(cfg, st, rec)
+        assert jnp.all(wire_bytes(out)[0] == wire_bytes(pkts)[0])
+
+    def test_retry_claims_freed_slot(self):
+        cfg = ParkConfig(capacity=4, max_exp=10, pmax=1024,
+                         recirculation=True)
+        st = init_state(cfg)
+        a, b = mk(2, 4, 300), mk(3, 4, 300)
+        st, sa = split(cfg, st, a)
+        st, sb = split(cfg, st, b)          # table full: all ENB=0
+        assert int(jnp.sum(sb.pp_enb)) == 0
+        st, _ = merge(cfg, st, sa)          # frees the slots
+        st, rb = recirc(cfg, st, sb)        # retry succeeds
+        assert int(jnp.sum(rb.pp_enb)) == 4
+        st, mb = merge(cfg, st, rb)
+        assert jnp.all(wire_bytes(mb)[0] == wire_bytes(b)[0])
+
+    def test_continuation_skips_evicted_slot(self):
+        """A slot evicted between the passes must not be overwritten; the
+        stale tag then drops as a premature eviction at Merge."""
+        cfg = ParkConfig(capacity=4, max_exp=1, pmax=1024,
+                         recirculation=True)
+        st = init_state(cfg)
+        first = mk(4, 4, 500)
+        st, s1 = split(cfg, st, first)
+        st, s2 = split(cfg, st, mk(5, 4, 500))  # wraps: evicts batch 1
+        assert C.as_dict(st.counters)["evictions"] == 4
+        st, r1 = recirc(cfg, st, s1)            # lost slots: no extension
+        np.testing.assert_array_equal(np.asarray(r1.payload_len),
+                                      np.asarray(s1.payload_len))
+        st, m1 = merge(cfg, st, r1)
+        assert not bool(jnp.any(m1.alive))
+        assert C.as_dict(st.counters)["premature_evictions"] == 4
+        # batch 2's payloads are intact: their rows were never touched
+        st, r2 = recirc(cfg, st, s2)
+        st, m2 = merge(cfg, st, r2)
+        assert jnp.all(wire_bytes(m2)[0] == wire_bytes(mk(5, 4, 500))[0])
+
+    def test_dead_lane_rows_are_noops(self):
+        cfg = ParkConfig(capacity=16, max_exp=2, pmax=512,
+                         recirculation=True)
+        st = init_state(cfg)
+        from repro.core.packet import dead_batch
+        st2, out = recirc(cfg, st, dead_batch(8, 512))
+        assert C.as_dict(st2.counters) == C.as_dict(st.counters)
+        assert not bool(jnp.any(out.alive))
+
+
+class TestBudget:
+    def test_admission_order_and_denial(self):
+        cfg = ParkConfig(capacity=64, max_exp=2, pmax=1024,
+                         recirculation=True)
+        st = init_state(cfg)
+        pkts = mk(6, 8, 500)                 # all want a second pass
+        st, out = split(cfg, st, pkts)
+        fwd, lane, denied = E.recirc_select(cfg, out, 3)
+        assert int(denied) == 5
+        assert int(jnp.sum(lane.alive)) == 3
+        assert int(jnp.sum(fwd.alive)) == 5
+        # admitted rows are the first three in arrival order
+        np.testing.assert_array_equal(np.asarray(lane.pp_ti),
+                                      np.asarray(out.pp_ti[:3]))
+
+    def test_budget_drops_counted_in_engine(self):
+        cfg = ParkConfig(capacity=256, max_exp=2, pmax=1024,
+                         recirculation=True, recirc_frac=1 / 64)
+        pkts = fixed(500).make_batch(jax.random.key(7), 256, pmax=1024)
+        res = E.run_engine(cfg, Chain((MacSwap(),)),
+                           to_time_major(pkts, 64), window=2)
+        assert res.counters["recirc_budget_drops"] > 0
+        assert res.counters["recirculations"] > 0
+        assert (res.counters["recirculations"]
+                + res.counters["recirc_budget_drops"]) >= 256
+
+    def test_zero_budget_disables_lane(self):
+        """recirc_frac below one packet per chunk = lane off: behaves
+        exactly like recirculation=False scheduling (just wider rows)."""
+        cfg = ParkConfig(capacity=256, max_exp=2, pmax=1024,
+                         recirculation=True, recirc_frac=0.0)
+        assert E.recirc_slots(cfg, 64) == 0
+        pkts = fixed(500).make_batch(jax.random.key(8), 128, pmax=1024)
+        res = E.run_engine(cfg, Chain((MacSwap(),)),
+                           to_time_major(pkts, 64), window=1)
+        assert res.counters["recirculations"] == 0
+        assert res.counters["recirc_budget_drops"] == 0
+
+
+class TestEngineRecirc:
+    def test_engine_matches_loop_oracle(self):
+        """Recirculation ON: scanned engine bit-identical to the host-loop
+        mirror, drops and explicit drops included."""
+        pkts = enterprise().make_batch(jax.random.key(9), 256, pmax=1024)
+        rules = tuple(int(ip) for ip in
+                      np.unique(np.asarray(pkts.src_ip))[:40].tolist())
+        chain = Chain((Firewall(rules=rules), Nat()))
+        cfg = ParkConfig(capacity=96, max_exp=4, pmax=1024,
+                         recirculation=True)
+        for ed in (False, True):
+            a = simulate(cfg, chain, pkts, window=3, chunk=64,
+                         explicit_drops=ed)
+            b = simulate_loop(cfg, chain, pkts, window=3, chunk=64,
+                              explicit_drops=ed)
+            _assert_same_result(a, b)
+
+    def test_off_still_matches_seed_loop(self):
+        """Recirculation OFF (including a recirc-capable config with the
+        flag off) stays bit-identical to the seed loop."""
+        pkts = enterprise().make_batch(jax.random.key(10), 256, pmax=1024)
+        cfg = ParkConfig(capacity=128, max_exp=2, pmax=1024,
+                         recirculation=False)
+        a = simulate(cfg, Chain((MacSwap(),)), pkts, window=2, chunk=64)
+        b = simulate_loop(cfg, Chain((MacSwap(),)), pkts, window=2, chunk=64)
+        assert a.counters["recirculations"] == 0
+        _assert_same_result(a, b)
+
+    def test_gain_above_off_at_high_occupancy(self):
+        """≥90% table occupancy: recirculation-on goodput gain must beat
+        recirculation-off (the §6.2.5 / Fig. 13 direction)."""
+        pkts = fixed(600).make_batch(jax.random.key(11), 256, pmax=1024)
+        trace = to_time_major(pkts, 64)
+        chain = Chain((MacSwap(),))
+        kw = dict(capacity=64, max_exp=8, pmax=1024)
+        r_off = E.run_engine(ParkConfig(**kw), chain, trace, window=4)
+        r_on = E.run_engine(ParkConfig(recirculation=True, **kw), chain,
+                            trace, window=4)
+        assert r_off.peak_occupancy >= 0.9 * 64
+        assert r_on.counters["skip_occupied"] > 0
+        g_off = E.goodput_gain(r_off)["goodput_gain"]
+        g_on = E.goodput_gain(r_on)["goodput_gain"]
+        assert g_on > g_off
+
+    def test_recirc_functional_equivalence(self):
+        """Wire-level equivalence holds through the recirculation lane:
+        merged output equals the whole-packet baseline (paper §6.2.6)."""
+        from repro.switchsim.simulate import baseline_roundtrip
+        pkts = fixed(700).make_batch(jax.random.key(12), 128, pmax=1024)
+        chain = Chain((MacSwap(),))
+        cfg = ParkConfig(capacity=256, max_exp=2, pmax=1024,
+                         recirculation=True)
+        res = simulate(cfg, chain, pkts, window=2, chunk=64)
+        base_out, _, _ = baseline_roundtrip(chain, pkts)
+        got_w, _ = wire_bytes(_cat(res.merged))
+        want_w, _ = wire_bytes(base_out)
+        # merged keeps arrival order per chunk but recirculated packets
+        # re-emerge one step later in lane rows: compare as multisets of
+        # alive wire serializations.
+        got = {bytes(r) for r in np.asarray(got_w) if r.any()}
+        want = {bytes(r) for r in np.asarray(want_w) if r.any()}
+        assert got == want
+        assert res.counters["premature_evictions"] == 0
+        assert res.counters["merges"] == 128
+
+
+class TestGoodputBaseline:
+    def test_drop_aware_baseline_excludes_dropped_return_trip(self):
+        pkts = fixed(512).make_batch(jax.random.key(13), 256, pmax=1024)
+        rules = tuple(int(ip) for ip in
+                      np.unique(np.asarray(pkts.src_ip))[:64].tolist())
+        chain = Chain((Firewall(rules=rules), Nat()))
+        cfg = ParkConfig(capacity=512, max_exp=2, pmax=1024)
+        res = E.run_engine(cfg, chain, to_time_major(pkts, 64), window=1)
+        g = E.goodput_gain(res)
+        dropped_bytes = res.wire_bytes - res.ret_bytes
+        assert dropped_bytes > 0  # the firewall dropped something
+        assert g["baseline_link_bytes"] == res.wire_bytes + res.ret_bytes
+        assert g["baseline_naive_link_bytes"] == 2 * res.wire_bytes
+        assert g["baseline_link_bytes"] < g["baseline_naive_link_bytes"]
+        assert g["goodput_gain"] < g["goodput_gain_naive"]
+
+    def test_baselines_agree_without_drops(self):
+        pkts = fixed(512).make_batch(jax.random.key(14), 128, pmax=1024)
+        cfg = ParkConfig(capacity=256, max_exp=2, pmax=1024)
+        res = E.run_engine(cfg, Chain((MacSwap(),)),
+                           to_time_major(pkts, 64), window=1)
+        assert res.ret_bytes == res.wire_bytes
+        g = E.goodput_gain(res)
+        assert g["goodput_gain"] == g["goodput_gain_naive"]
+
+
+class TestConfigValidation:
+    @pytest.mark.parametrize("kw", [
+        dict(capacity=0), dict(pmax=0), dict(max_exp=0),
+        dict(min_park_len=0), dict(max_clk=1),
+        dict(recirc_frac=-0.1), dict(recirc_frac=1.5),
+    ])
+    def test_bad_config_raises(self, kw):
+        with pytest.raises(ValueError):
+            ParkConfig(**kw)
+
+    def test_pmax_narrower_than_row_roundtrips(self):
+        """pmax < park_bytes (easy with 352B rows) must clamp, not crash."""
+        cfg = ParkConfig(capacity=32, max_exp=2, pmax=128, min_park_len=64,
+                         recirculation=True)
+        st = init_state(cfg)
+        pkts = mk(15, 8, HDR_BYTES + 100, pmax=128)
+        st, sent = split(cfg, st, pkts)
+        assert int(jnp.sum(sent.pp_enb)) == 8
+        st, rec = recirc(cfg, st, sent)
+        st, out = merge(cfg, st, rec)
+        assert jnp.all(wire_bytes(out)[0] == wire_bytes(pkts)[0])
