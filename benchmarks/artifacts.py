@@ -1,0 +1,79 @@
+"""BENCH_*.json artifact schema shared by the benchmark writers and the
+figures consumer.
+
+Every benchmark that contributes to the per-commit trajectory writes one
+``BENCH_<name>.json`` via ``write_bench_json`` (CI uploads them as
+workflow artifacts), and ``benchmarks/figures.py`` re-renders the rows
+from those files via ``load_bench_json`` — consuming the artifact instead
+of re-running the simulation, and failing loudly on a missing or
+malformed file.
+
+Schema (version 1):
+
+    {
+      "schema": 1,
+      "bench": "<benchmark name>",
+      "rows": [{"name": str, "value": int|float, "derived": str}, ...],
+      "summary": {...}          # benchmark-specific headline numbers
+    }
+"""
+from __future__ import annotations
+
+import json
+import os
+
+SCHEMA_VERSION = 1
+
+
+class BenchArtifactError(RuntimeError):
+    """A BENCH_*.json file is missing or does not match the schema."""
+
+
+def rows_to_json(rows) -> list[dict]:
+    """Convert the benches' ``(name, value, derived)`` tuples."""
+    return [{"name": n, "value": v, "derived": str(d)} for n, v, d in rows]
+
+
+def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
+                     ) -> dict:
+    """Write one benchmark artifact; returns the payload written."""
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "rows": rows_to_json(rows),
+        "summary": summary or {},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+def load_bench_json(path: str) -> dict:
+    """Load + validate one artifact; raises BenchArtifactError on any
+    missing file or schema violation (never returns a partial payload)."""
+    if not os.path.exists(path):
+        raise BenchArtifactError(f"missing benchmark artifact: {path}")
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise BenchArtifactError(f"malformed JSON in {path}: {e}") from e
+    if not isinstance(payload, dict):
+        raise BenchArtifactError(f"{path}: top level must be an object")
+    if payload.get("schema") != SCHEMA_VERSION:
+        raise BenchArtifactError(
+            f"{path}: schema {payload.get('schema')!r} != {SCHEMA_VERSION}")
+    if not isinstance(payload.get("bench"), str) or not payload["bench"]:
+        raise BenchArtifactError(f"{path}: 'bench' must be a non-empty string")
+    rows = payload.get("rows")
+    if not isinstance(rows, list):
+        raise BenchArtifactError(f"{path}: 'rows' must be a list")
+    for i, row in enumerate(rows):
+        if (not isinstance(row, dict) or "name" not in row
+                or "value" not in row):
+            raise BenchArtifactError(
+                f"{path}: rows[{i}] must be an object with name/value")
+    if not isinstance(payload.get("summary", {}), dict):
+        raise BenchArtifactError(f"{path}: 'summary' must be an object")
+    return payload

@@ -45,7 +45,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.artifacts import write_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from artifacts import write_bench_json
+
 from repro.core.packet import to_time_major, wire_bytes
+from repro.hostmodel import HostModel, pcie_reduction
 from repro.core.park import ParkConfig
 from repro.nf.chain import Chain
 from repro.nf.firewall import Firewall
@@ -122,7 +128,9 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
             f"gain_naive={gain['goodput_gain_naive']:.4f};"
             f"model_peak_gain={model_gain:.4f};"
             f"model_goodput_gbps={op_park.goodput_gbps:.2f};"
-            f"bottleneck={op_park.bottleneck}"))
+            f"bottleneck={op_park.bottleneck};"
+            f"pcie_reduction="
+            f"{pcie_reduction(HostModel().link, res.telemetry):.4f}"))
 
     if verify and 1 in pipes_list:
         trace = to_time_major(pkts, chunk)
@@ -249,6 +257,9 @@ def main() -> None:
                          "notifications back to the switch (paper §6.2.4)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-identical check vs the seed loop")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the BENCH json artifact here "
+                         "(benchmarks/artifacts.py schema)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 512 packets, chunk 64, small table")
     args = ap.parse_args()
@@ -282,6 +293,9 @@ def main() -> None:
     print("name,value,derived")
     for name, value, derived in rows:
         print(f"{name},{value},{str(derived).replace(',', ';')}")
+    if args.json:
+        write_bench_json(args.json, "recirc" if args.recirc else "pipeline",
+                         rows)
 
 
 if __name__ == "__main__":

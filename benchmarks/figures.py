@@ -6,12 +6,28 @@ link/PCIe/CPU model (switchsim.perfmodel) provides rate curves; eviction /
 explicit-drop dynamics additionally run the *real* core state machine
 (switchsim.simulate).  Paper-reported values are included in the output for
 side-by-side comparison; EXPERIMENTS.md discusses the deltas.
+
+Run as a script, this module is the *consumer* of the per-commit
+``BENCH_*.json`` artifacts (benchmarks/artifacts.py schema) written by
+``bench_pipeline.py --json`` / ``bench_hostmodel.py --json``: it re-renders
+their rows without re-running any simulation, and exits non-zero on a
+missing or malformed artifact instead of silently rendering nothing:
+
+    PYTHONPATH=src python benchmarks/figures.py BENCH_pipeline.json BENCH_hostmodel.json
 """
 from __future__ import annotations
+
+import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from benchmarks.artifacts import BenchArtifactError, load_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from artifacts import BenchArtifactError, load_bench_json
 
 from repro.core.park import ParkConfig
 from repro.nf.chain import Chain
@@ -247,3 +263,35 @@ ALL_FIGURES = [
     fig16_small_packet_latency,
     table1_resources,
 ]
+
+
+def main(argv=None) -> None:
+    """Render benchmark-trajectory rows from BENCH_*.json artifacts.
+
+    Consumes the artifacts the benches wrote (no simulation re-run);
+    any missing or schema-violating file is a hard error (exit 2), not a
+    silently empty figure.
+    """
+    ap = argparse.ArgumentParser(
+        description="Render the benchmark trajectory from BENCH_*.json "
+                    "artifacts written by benchmarks/bench_*.py --json.")
+    ap.add_argument("artifacts", nargs="+", metavar="BENCH_JSON",
+                    help="paths to BENCH_*.json files")
+    args = ap.parse_args(argv)
+    try:
+        payloads = [load_bench_json(p) for p in args.artifacts]
+    except BenchArtifactError as e:
+        print(f"figures: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    print("name,value,derived")
+    for payload in payloads:
+        for row in payload["rows"]:
+            derived = str(row.get("derived", "")).replace(",", ";")
+            print(f"{row['name']},{row['value']},{derived}")
+    for payload in payloads:
+        for key, val in sorted(payload.get("summary", {}).items()):
+            print(f"# {payload['bench']}/{key}: {val}")
+
+
+if __name__ == "__main__":
+    main()

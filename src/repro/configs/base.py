@@ -102,7 +102,7 @@ class ModelConfig:
 
     def param_count(self) -> int:
         """Approximate parameter count (embeddings included once)."""
-        d, l = self.d_model, self.num_layers
+        d, nl = self.d_model, self.num_layers
         emb = self.vocab_padded() * d * (1 if self.tie_embeddings else 2)
         if self.family == "ssm":
             s = self.ssm
@@ -110,7 +110,7 @@ class ModelConfig:
             nheads = d_in // s.head_dim
             per = (d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
                    + d_in * d + d_in)  # in_proj + out_proj + norm-ish
-            return emb + l * per
+            return emb + nl * per
         attn = d * self.num_heads * self.head_dim * 2 \
             + d * self.num_kv_heads * self.head_dim * 2
         if self.mla is not None:
@@ -125,20 +125,20 @@ class ModelConfig:
             ffn_moe = 3 * d * mo.d_ff_expert * mo.num_experts \
                 + 3 * d * mo.d_ff_expert * mo.shared_experts + d * mo.num_experts
             ffn_dense = 3 * d * self.d_ff
-            n_moe = l - mo.first_dense_layers
+            n_moe = nl - mo.first_dense_layers
             ffn_total = n_moe * ffn_moe + mo.first_dense_layers * ffn_dense
         else:
-            ffn_total = l * 3 * d * self.d_ff
+            ffn_total = nl * 3 * d * self.d_ff
         enc = self.enc_layers * (attn * 2 + 3 * d * self.d_ff)  # enc + cross approx
-        return emb + l * attn + ffn_total + enc
+        return emb + nl * attn + ffn_total + enc
 
     def active_param_count(self) -> int:
         """Parameters touched per token (MoE top-k instead of all experts)."""
         if self.moe is None:
             return self.param_count()
         mo = self.moe
-        d, l = self.d_model, self.num_layers
+        d, nl = self.d_model, self.num_layers
         full = self.param_count()
-        all_experts = (l - mo.first_dense_layers) * 3 * d * mo.d_ff_expert * mo.num_experts
-        active = (l - mo.first_dense_layers) * 3 * d * mo.d_ff_expert * mo.top_k
+        all_experts = (nl - mo.first_dense_layers) * 3 * d * mo.d_ff_expert * mo.num_experts
+        active = (nl - mo.first_dense_layers) * 3 * d * mo.d_ff_expert * mo.top_k
         return full - all_experts + active

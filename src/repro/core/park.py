@@ -45,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core import counters as C
 from repro.core.header import crc16_tag, tag_valid
-from repro.core.packet import OP_DROP, OP_MERGE, PacketBatch
+from repro.core.packet import OP_DROP, PacketBatch
 
 BLOCK_BYTES = 16  # single MAT-cell width (paper Fig. 4: payload blocks P0..PL)
 PARK_BYTES_BASE = 160  # paper §1: "store 160 bytes from each packet's payload"

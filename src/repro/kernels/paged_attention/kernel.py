@@ -72,8 +72,6 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, lengths,
     b, kh, g, e = q.shape
     npages, page, _, _ = k_pages.shape
     mp = page_table.shape[1]
-    # clamp pad entries so index_map stays in range; masking handles validity
-    pt = jnp.maximum(page_table, 0)
 
     kv_spec = pl.BlockSpec(
         (1, page, kh, e), lambda b_, p_, pt_, ln_: (pt_[b_, p_], 0, 0, 0))

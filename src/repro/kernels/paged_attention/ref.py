@@ -23,7 +23,7 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bkgt,btke->bkge", (p / l).astype(v.dtype), v,
+    norm = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btke->bkge", (p / norm).astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)

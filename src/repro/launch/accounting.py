@@ -30,7 +30,7 @@ layer (and every chunk) lowers to identical HLO.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig

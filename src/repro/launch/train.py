@@ -24,7 +24,6 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.reduced import reduced

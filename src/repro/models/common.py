@@ -13,9 +13,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -130,7 +127,7 @@ def blockwise_attention(q, k, v, *, causal=True, window=None,
         qpos = q_pos_base + qidx * q_block   # (q_block,)
 
         def inner(carry, kvi):
-            m, l, acc = carry
+            m, norm, acc = carry
             kblk, vblk, kvidx = kvi
             kvpos = kv_pos_base + kvidx * kv_block
             srel = jnp.einsum("bqkge,btke->bkgqt", qblk, kblk,
@@ -144,11 +141,11 @@ def blockwise_attention(q, k, v, *, causal=True, window=None,
             m_new = jnp.maximum(m, srel.max(axis=-1))
             p = jnp.exp(srel - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(axis=-1)
+            norm_new = norm * alpha + p.sum(axis=-1)
             pv = jnp.einsum("bkgqt,btke->bkgqe", p.astype(vblk.dtype), vblk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * alpha[..., None] + pv
-            return (m_new, l_new, acc_new), None
+            return (m_new, norm_new, acc_new), None
 
         m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
@@ -157,13 +154,13 @@ def blockwise_attention(q, k, v, *, causal=True, window=None,
             carry = (m0, l0, a0)
             for j in range(nkv):
                 carry, _ = inner(carry, (kb[:, j], vb[:, j], j))
-            m, l, acc = carry
+            m, norm, acc = carry
         else:
-            (m, l, acc), _ = jax.lax.scan(
+            (m, norm, acc), _ = jax.lax.scan(
                 inner, (m0, l0, a0),
                 (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
                  jnp.arange(nkv)))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(norm[..., None], 1e-30)
         return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,q_block,K,G,E)
 
     if unroll:
@@ -193,8 +190,8 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=None):
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bkgt,btke->bkge", (p / l).astype(v_cache.dtype), v_cache,
+    norm = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btke->bkge", (p / norm).astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
 

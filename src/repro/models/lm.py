@@ -19,7 +19,6 @@ layer injects ``with_sharding_constraint`` (identity on CPU tests).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -33,7 +32,10 @@ from repro.models import rglru as rg_mod
 from repro.models import ssd as ssd_mod
 
 Shard = Callable[[jax.Array, str], jax.Array]
-_identity: Shard = lambda x, name: x
+
+
+def _identity(x, name):
+    return x
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,12 +46,12 @@ class Segment:
 
 
 def segments_for(cfg: ModelConfig) -> list[Segment]:
-    l = cfg.num_layers
+    nl = cfg.num_layers
     if cfg.family == "ssm":
-        return [Segment("blocks", ("ssd",), l)]
+        return [Segment("blocks", ("ssd",), nl)]
     if cfg.family == "hybrid":
         pat = cfg.hybrid.pattern
-        full, rem = divmod(l, len(pat))
+        full, rem = divmod(nl, len(pat))
         segs = [Segment("sb", tuple(k if k != "attn" else "attn_local"
                                     for k in pat), full)]
         if rem:
@@ -57,17 +59,17 @@ def segments_for(cfg: ModelConfig) -> list[Segment]:
                 k if k != "attn" else "attn_local" for k in pat[:rem]), 1))
         return segs
     if cfg.family == "audio":
-        return [Segment("dec", ("dec",), l)]
+        return [Segment("dec", ("dec",), nl)]
     if cfg.moe is not None:
         if cfg.mla is not None:
             fd = cfg.moe.first_dense_layers
             segs = []
             if fd:
                 segs.append(Segment("dense0", ("mla_dense",), fd))
-            segs.append(Segment("blocks", ("mla_moe",), l - fd))
+            segs.append(Segment("blocks", ("mla_moe",), nl - fd))
             return segs
-        return [Segment("blocks", ("moe",), l)]
-    return [Segment("blocks", ("dense",), l)]
+        return [Segment("blocks", ("moe",), nl)]
+    return [Segment("blocks", ("dense",), nl)]
 
 
 # --------------------------------------------------------------------------
@@ -255,7 +257,6 @@ def _mla_sublayer(p, x, ctx: Ctx, cache):
 
 
 def _state_sublayer(kind, p, x, ctx: Ctx, cache):
-    mod = rg_mod if kind == "rec" else ssd_mod
     key = "rec" if kind == "rec" else "ssd"
     if ctx.phase == "decode":
         step = rg_mod.rglru_step if kind == "rec" else ssd_mod.ssd_step
@@ -559,7 +560,7 @@ class LM:
 
         def stack(tree, n):
             return jax.tree.map(
-                lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), tree)
+                lambda a: jax.ShapeDtypeStruct((n,) + a.shape, a.dtype), tree)
 
         return {seg.name: stack({f"sub{i}": leaf(k)
                                  for i, k in enumerate(seg.kinds)}, seg.count)

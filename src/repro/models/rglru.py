@@ -83,7 +83,6 @@ def _gates(p, xr, cfg):
 
 def rglru_seq(p, x, cfg: ModelConfig, conv_state=None, h0=None):
     """Full-sequence recurrent block.  x: (B,S,D) -> (y, (h_last, conv_state))."""
-    hy = cfg.hybrid
     gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))
     xr, conv_state = _causal_conv(
         jnp.einsum("bsd,de->bse", x, p["w_x"]), p["conv_w"], p["conv_b"],
@@ -93,9 +92,9 @@ def rglru_seq(p, x, cfg: ModelConfig, conv_state=None, h0=None):
         # fold carried state into the first step: b_0 += a_0 * h0
         bterm = bterm.at[:, 0].add(a[:, 0] * h0)
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
         return al * ar, ar * bl + br
 
     _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)

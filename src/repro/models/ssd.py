@@ -143,7 +143,8 @@ def ssd_seq(p, x, cfg: ModelConfig, conv_state=None, h0=None, unroll=False):
         h_new = decay_all[:, :, None, None] * h + states
         return h_new, y_diag + y_off
 
-    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    def swap(t):
+        return jnp.moveaxis(t, 1, 0)
     if unroll:
         h_last = h0
         ys = []

@@ -14,7 +14,6 @@ immediately instead of waiting for expiry-based eviction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
 
 import jax.numpy as jnp
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.packet import PacketBatch

@@ -27,7 +27,7 @@ from repro.configs.base import ModelConfig
 from repro.models import common as cm
 from repro.models.lm import LM, segments_for
 from repro.serving import pool as pool_mod
-from repro.serving.pool import PoolConfig, PoolState
+from repro.serving.pool import PoolConfig
 
 HEADER_BYTES_PER_PAGE = 8   # (page_id u32-ish, generation u16, crc u16)
 HEADER_FIXED_BYTES = 16     # request id, last token, position, flags
@@ -150,7 +150,6 @@ class ServeEngine:
     def _step_one(self, slot: int, token: int, record: bool = True) -> bool:
         """Advance one request by one token.  Returns False on drop."""
         cfg = self.lm.cfg
-        p = self.ecfg.pool
         if not self._ensure_page(slot):
             self._drop(slot)
             return False
@@ -212,16 +211,7 @@ class ServeEngine:
         cfg = self.lm.cfg
         b, s, kh, g, e = 1, 1, cfg.num_kv_heads, \
             cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
-        from repro.kernels.paged_attention.ref import \
-            paged_decode_attention_ref
         qh = q.reshape(1, kh, g, e)
-        o_hist = paged_decode_attention_ref(
-            qh, self.k_pages[li], self.v_pages[li], pt, lengths)
-        # combine with the current token (not yet written): exact softmax
-        # over [history, self] via two-part logsumexp
-        s_self = jnp.einsum("bkge,bke->bkg", qh, k_new[:, 0],
-                            preferred_element_type=jnp.float32) * (e ** -0.5)
-        # recompute history stats for the combine
         hist_len = lengths[0]
         if int(hist_len) == 0:
             o = v_new[:, 0][:, :, None, :]

@@ -7,8 +7,10 @@ compiles the whole split -> NF-chain -> merge timeline into ONE XLA program:
 
   * ``lax.scan`` over time steps.  The carry holds ``(ParkState, NF-chain
     states, in-flight ring buffer, step index)``; the per-step ys carry the
-    merged chunk plus int32 byte tallies (wire bytes in, server-link bytes),
-    so accounting lives on-device and is aggregated once at the end.
+    merged chunk plus int32 per-link byte/packet tallies (wire in,
+    switch->server, server->switch, recirculation port, merged out —
+    ``switchsim.telemetry.LinkTelemetry``, DESIGN.md §7), so accounting
+    lives on-device and is aggregated once at the end.
   * The in-flight window — the paper's split->merge time delta (~30 us, §4)
     — is a ``window``-deep ring of packet chunks indexed by ``t % window``
     with ``dynamic_index_in_dim`` / ``dynamic_update_index_in_dim``; chunk
@@ -55,6 +57,8 @@ from repro.core.packet import PacketBatch, gather_rows
 from repro.core.park import (ParkConfig, ParkState, init_state, merge_fn,
                              occupancy, recirc_fn, split_fn)
 from repro.nf.chain import Chain, to_explicit_drops
+from repro.switchsim.telemetry import (TEL_FIELDS, LinkTelemetry,
+                                       sum_telemetry)
 
 
 @dataclasses.dataclass
@@ -75,6 +79,9 @@ class EngineResult:
     trip (see ``goodput_gain``).
     ``peak_occupancy``: max live parked slots observed at any step (max
     across pipes when multi-pipe).
+    ``telemetry``: exact per-link byte/packet totals (wire in, switch->server,
+    server->switch, recirculation port, merged out — DESIGN.md §7); the byte
+    fields above are derived views kept for compatibility.
     """
 
     merged: PacketBatch
@@ -86,6 +93,7 @@ class EngineResult:
     wire_bytes: int
     ret_bytes: int
     peak_occupancy: int
+    telemetry: LinkTelemetry
 
 
 @dataclasses.dataclass
@@ -99,10 +107,18 @@ class PipesResult(EngineResult):
     per_pipe_counters: list[dict] = dataclasses.field(default_factory=list)
     per_pipe_srv_bytes: list[int] = dataclasses.field(default_factory=list)
     per_pipe_wire_bytes: list[int] = dataclasses.field(default_factory=list)
+    # one LinkTelemetry per pipe = per NF server under §6.3.2 steering;
+    # feeds repro.hostmodel's per-server PCIe/DMA accounting (DESIGN.md §7)
+    per_pipe_telemetry: list[LinkTelemetry] = dataclasses.field(
+        default_factory=list)
 
 
 def _alive_bytes(p: PacketBatch) -> jax.Array:
     return jnp.sum(jnp.where(p.alive, p.pkt_len(), 0))
+
+
+def _alive_pkts(p: PacketBatch) -> jax.Array:
+    return jnp.sum(p.alive.astype(jnp.int32))
 
 
 def recirc_slots(cfg: ParkConfig, chunk: int) -> int:
@@ -181,6 +197,7 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
         def step(carry, cin):
             state, cstates, ring, lane, t = carry
             wire_b = _alive_bytes(cin)
+            wire_p = _alive_pkts(cin)
             if recirc:
                 # Second pass for packets re-injected at the previous step
                 # (their wire bytes were paid on first arrival).
@@ -192,10 +209,12 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
                 state = dataclasses.replace(
                     state, counters=C.bump(state.counters,
                                            "recirc_budget_drops", n_denied))
+                # recirculation-port traffic = what enters the lane this step
+                rec_b, rec_p = _alive_bytes(lane), _alive_pkts(lane)
                 nf_in = _cat_rows(rout, out)
             else:
+                rec_b = rec_p = jnp.zeros((), jnp.int32)
                 nf_in = out
-            srv_fwd_b = _alive_bytes(nf_in)
             cstates, nf_out, dropped, _cycles = chain.run(cstates, nf_in)
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
@@ -209,11 +228,19 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
                 ring = jax.tree.map(
                     lambda r, v: jax.lax.dynamic_update_index_in_dim(
                         r, v, slot, axis=0), ring, nf_out)
-            srv_b = srv_fwd_b + _alive_bytes(returning)
             state, m = merge_fn(cfg, state, returning, use_kernel=use_kernel)
-            ys = dict(merged=m, wire_b=wire_b, srv_b=srv_b,
-                      srv_fwd_b=srv_fwd_b, ret_b=_alive_bytes(m),
-                      occ=occupancy(state))
+            # Per-link telemetry ys, keyed by LinkTelemetry field names
+            # (DESIGN.md §7); summed host-side in int64 by _finalize.
+            ys = dict(
+                merged=m, occ=occupancy(state),
+                wire_pkts=wire_p, wire_bytes=wire_b,
+                to_server_pkts=_alive_pkts(nf_in),
+                to_server_bytes=_alive_bytes(nf_in),
+                from_server_pkts=_alive_pkts(returning),
+                from_server_bytes=_alive_bytes(returning),
+                recirc_pkts=rec_p, recirc_bytes=rec_b,
+                merged_pkts=_alive_pkts(m), merged_bytes=_alive_bytes(m),
+            )
             if collect_sent:
                 ys["sent"] = nf_in
             return (state, cstates, ring, lane, t + 1), ys
@@ -249,9 +276,26 @@ def _pad_trace(trace: PacketBatch, window: int, axis: int = 0) -> PacketBatch:
     return jax.tree.map(pad, trace)
 
 
+def _sum_telemetry(ys: dict) -> LinkTelemetry:
+    """Total LinkTelemetry across every remaining axis (time, and pipes
+    when present), summed in int64 so totals are exact."""
+    return LinkTelemetry(**{
+        name: int(np.asarray(ys[name], np.int64).sum())
+        for name in TEL_FIELDS})
+
+
+def _per_pipe_telemetry(ys: dict) -> list[LinkTelemetry]:
+    """One LinkTelemetry per pipe: sum (P, T) ys over the time axis only."""
+    sums = {name: np.asarray(ys[name], np.int64).sum(axis=-1)
+            for name in TEL_FIELDS}
+    n_pipes = next(iter(sums.values())).shape[0]
+    return [LinkTelemetry(**{name: int(sums[name][p]) for name in TEL_FIELDS})
+            for p in range(n_pipes)]
+
+
 def _finalize(ys: dict, window: int, collect_sent: bool, time_axis: int):
-    """Slice the warm-up/drain steps off the ys and sum byte tallies."""
-    t_pad = ys["wire_b"].shape[-1]
+    """Slice the warm-up/drain steps off the merged/sent ys."""
+    t_pad = ys["wire_bytes"].shape[-1]
     t_real = t_pad - window
 
     def slice_time(a, start, stop):
@@ -264,12 +308,8 @@ def _finalize(ys: dict, window: int, collect_sent: bool, time_axis: int):
     sent = None
     if collect_sent:
         sent = jax.tree.map(lambda a: slice_time(a, 0, t_real), ys["sent"])
-    wire = np.asarray(ys["wire_b"], np.int64).sum()
-    srv = np.asarray(ys["srv_b"], np.int64).sum()
-    srv_fwd = np.asarray(ys["srv_fwd_b"], np.int64).sum()
-    ret = np.asarray(ys["ret_b"], np.int64).sum()
     occ = np.asarray(ys["occ"], np.int64).max() if ys["occ"].size else 0
-    return merged, sent, int(wire), int(srv), int(srv_fwd), int(ret), int(occ)
+    return merged, sent, int(occ)
 
 
 def run_engine(
@@ -295,13 +335,14 @@ def run_engine(
     fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
                    collect_sent, pipes=False, recirc=lane)
     state, ys = fn(trace)
-    merged, sent, wire, srv, srv_fwd, ret, occ = _finalize(
-        ys, window, collect_sent, time_axis=0)
+    merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=0)
+    tel = _sum_telemetry(ys)
     return EngineResult(
         merged=merged, sent=sent, state=state,
         counters=C.as_dict(state.counters),
-        srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
-        ret_bytes=ret, peak_occupancy=occ,
+        srv_bytes=tel.srv_bytes, srv_fwd_bytes=tel.to_server_bytes,
+        wire_bytes=tel.wire_bytes, ret_bytes=tel.merged_bytes,
+        peak_occupancy=occ, telemetry=tel,
     )
 
 
@@ -327,21 +368,22 @@ def run_pipes(
     fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
                    collect_sent, pipes=True, recirc=lane)
     state, ys = fn(traces)
-    merged, sent, wire, srv, srv_fwd, ret, occ = _finalize(
-        ys, window, collect_sent, time_axis=1)
-    per_wire = np.asarray(ys["wire_b"], np.int64).sum(axis=-1)
-    per_srv = np.asarray(ys["srv_b"], np.int64).sum(axis=-1)
+    merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=1)
+    per_tel = _per_pipe_telemetry(ys)
+    tel = sum_telemetry(per_tel)
     ctr = np.asarray(state.counters, np.int64)  # (P, C.NUM)
     agg = dict(zip(C.NAMES, (int(v) for v in ctr.sum(axis=0))))
     per_pipe = [dict(zip(C.NAMES, (int(v) for v in ctr[p])))
                 for p in range(n_pipes)]
     return PipesResult(
         merged=merged, sent=sent, state=state,
-        counters=agg, srv_bytes=srv, srv_fwd_bytes=srv_fwd, wire_bytes=wire,
-        ret_bytes=ret, peak_occupancy=occ,
+        counters=agg, srv_bytes=tel.srv_bytes,
+        srv_fwd_bytes=tel.to_server_bytes, wire_bytes=tel.wire_bytes,
+        ret_bytes=tel.merged_bytes, peak_occupancy=occ, telemetry=tel,
         per_pipe_counters=per_pipe,
-        per_pipe_srv_bytes=[int(v) for v in per_srv],
-        per_pipe_wire_bytes=[int(v) for v in per_wire],
+        per_pipe_srv_bytes=[t.srv_bytes for t in per_tel],
+        per_pipe_wire_bytes=[t.wire_bytes for t in per_tel],
+        per_pipe_telemetry=per_tel,
     )
 
 

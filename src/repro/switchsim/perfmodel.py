@@ -26,7 +26,6 @@ All rates are bits/second; sizes are bytes.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core.packet import HDR_BYTES, PP_HDR_BYTES
 
@@ -197,6 +196,47 @@ def peak_goodput(m: ServerModel, d: TrafficDigest, nf_cycles,
         else:
             hi = mid
     return evaluate(m, d, nf_cycles, lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostOperatingPoint:
+    """An ``OperatingPoint`` augmented with the host model's view
+    (DESIGN.md §7): predicted PCIe load per direction with TLP/descriptor
+    overheads, bus utilization, and the server-side pps bound from the
+    per-server cycle budget."""
+
+    op: OperatingPoint
+    pcie_rx_gbps: float     # switch->server bus load incl. DMA overheads
+    pcie_tx_gbps: float     # server->switch bus load incl. DMA overheads
+    pcie_util: float        # busiest direction / effective link rate
+    server_pps_cap: float   # cycle-budget + PCIe + DMA-txn bound
+    server_bottleneck: str  # 'cpu' | 'pcie_rx' | 'pcie_tx' | 'dma_txn'
+
+
+def evaluate_host(m: ServerModel, d: TrafficDigest, nf_cycles,
+                  send_gbps: float, host=None) -> HostOperatingPoint:
+    """``evaluate`` plus the host model: PCIe bus load and server-bound
+    throughput for the same digest (DESIGN.md §7).
+
+    The analytic digest carries one server-link mean (``mean_srv_bytes``),
+    used for both directions — exact without chain drops, an upper bound
+    on the return direction with them.  The delivered pps is additionally
+    clamped by the host model's cycle-budget bound, which may be tighter
+    than ``ServerModel``'s flat caps for byte-heavy traffic.
+    """
+    from repro.hostmodel.server import HostModel, server_bound_pps
+    host = host if host is not None else HostModel()
+    op = evaluate(m, d, nf_cycles, send_gbps)
+    bound = server_bound_pps(host, nf_cycles,
+                             d.mean_srv_bytes, d.mean_srv_bytes)
+    pps = min(op.pps, bound.pps)
+    bus_per_pkt = host.link.mean_bus_bytes(d.mean_srv_bytes)
+    rx_gbps = pps * bus_per_pkt * 8 / 1e9
+    tx_gbps = rx_gbps  # symmetric under the one-mean digest
+    util = max(rx_gbps, tx_gbps) / host.link.effective_gbps
+    return HostOperatingPoint(
+        op=op, pcie_rx_gbps=rx_gbps, pcie_tx_gbps=tx_gbps, pcie_util=util,
+        server_pps_cap=bound.pps, server_bottleneck=bound.bottleneck)
 
 
 def scale_pipes(op: OperatingPoint, pipes: int) -> OperatingPoint:

@@ -30,6 +30,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import counters as C
 from repro.core.packet import PacketBatch, dead_batch, to_time_major
@@ -37,6 +38,7 @@ from repro.core.park import (ParkConfig, ParkState, init_state, merge, recirc,
                              split)
 from repro.nf.chain import Chain, to_explicit_drops
 from repro.switchsim import engine as engine_mod
+from repro.switchsim.telemetry import TEL_FIELDS, LinkTelemetry
 
 
 @dataclasses.dataclass
@@ -48,6 +50,7 @@ class SimResult:
     srv_bytes: int          # total bytes switch->server (goodput accounting)
     wire_bytes: int         # total bytes generator->switch
     ret_bytes: int          # bytes the merge stage put back on the wire
+    telemetry: LinkTelemetry  # exact per-link byte/packet totals (DESIGN.md §7)
 
 def _chunks(pkts: PacketBatch, chunk: int):
     n = pkts.batch_size
@@ -56,6 +59,15 @@ def _chunks(pkts: PacketBatch, chunk: int):
         jax.tree.map(lambda a: a[i: i + chunk], pkts)
         for i in range(0, n, chunk)
     ]
+
+
+def _alive_stats(p: PacketBatch) -> tuple[int, int]:
+    """(alive packets, alive on-wire bytes) — the loop-side mirror of the
+    engine's per-step telemetry tallies, fetched in one device->host sync."""
+    pair = np.asarray(jnp.stack([
+        jnp.sum(p.alive.astype(jnp.int32)),
+        jnp.sum(jnp.where(p.alive, p.pkt_len(), 0))]))
+    return int(pair[0]), int(pair[1])
 
 
 def simulate(
@@ -89,6 +101,7 @@ def simulate(
         srv_bytes=res.srv_bytes,
         wire_bytes=res.wire_bytes,
         ret_bytes=res.ret_bytes,
+        telemetry=res.telemetry,
     )
 
 
@@ -117,39 +130,46 @@ def simulate_loop(
     inflight: list = []
     merged: list = []
     sent: list = []
-    srv_bytes = 0
-    wire_bytes = 0
-    ret_bytes = 0
+    tel = dict.fromkeys(TEL_FIELDS, 0)  # recirc_* stay 0: lane off
 
     todo = _chunks(pkts, chunk)
     steps = len(todo) + window
     for t in range(steps):
         if t < len(todo):
             cin = todo[t]
-            wire_bytes += int(jnp.sum(jnp.where(cin.alive, cin.pkt_len(), 0)))
+            p, b = _alive_stats(cin)
+            tel["wire_pkts"] += p
+            tel["wire_bytes"] += b
             state, out = split(cfg, state, cin, use_kernel=use_kernel)
             sent.append(out)
-            srv_bytes += int(jnp.sum(jnp.where(out.alive, out.pkt_len(), 0)))
+            p, b = _alive_stats(out)
+            tel["to_server_pkts"] += p
+            tel["to_server_bytes"] += b
             chain_states, nf_out, dropped, _cycles = chain.run(chain_states, out)
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
             inflight.append(nf_out)
         if t >= window and (t - window) < len(inflight):
             returning = inflight[t - window]
-            srv_bytes += int(
-                jnp.sum(jnp.where(returning.alive, returning.pkt_len(), 0)))
+            p, b = _alive_stats(returning)
+            tel["from_server_pkts"] += p
+            tel["from_server_bytes"] += b
             state, m = merge(cfg, state, returning, use_kernel=use_kernel)
             merged.append(m)
-            ret_bytes += int(jnp.sum(jnp.where(m.alive, m.pkt_len(), 0)))
+            p, b = _alive_stats(m)
+            tel["merged_pkts"] += p
+            tel["merged_bytes"] += b
 
+    telemetry = LinkTelemetry(**tel)
     return SimResult(
         merged=merged,
         state=state,
         sent_to_server=sent,
         counters=C.as_dict(state.counters),
-        srv_bytes=srv_bytes,
-        wire_bytes=wire_bytes,
-        ret_bytes=ret_bytes,
+        srv_bytes=telemetry.srv_bytes,
+        wire_bytes=telemetry.wire_bytes,
+        ret_bytes=telemetry.merged_bytes,
+        telemetry=telemetry,
     )
 
 
@@ -159,10 +179,6 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
     §6): same op order (recirc pass, Split, budget admission, NF, ring,
     Merge), same lane width, one drain step — kept as the executable oracle
     for the scanned engine with recirculation on."""
-
-    def alive_bytes(p):
-        return int(jnp.sum(jnp.where(p.alive, p.pkt_len(), 0)))
-
     state = init_state(cfg)
     chain_states = chain.init_state()
     lane_w = engine_mod.recirc_slots(cfg, chunk)
@@ -174,21 +190,29 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
             for _ in range(max(window, 1))]
     merged: list = []
     sent: list = []
-    srv_bytes = wire_bytes = ret_bytes = 0
+    tel = dict.fromkeys(TEL_FIELDS, 0)
 
     for t in range(n_real + window + 1):
         cin = todo[t] if t < n_real else dead_in
-        wire_bytes += alive_bytes(cin)
+        p, b = _alive_stats(cin)
+        tel["wire_pkts"] += p
+        tel["wire_bytes"] += b
         state, rout = recirc(cfg, state, lane, use_kernel=use_kernel)
         state, out = split(cfg, state, cin, use_kernel=use_kernel)
         out, lane, n_denied = engine_mod.recirc_select(cfg, out, lane_w)
         state = dataclasses.replace(
             state, counters=C.bump(state.counters, "recirc_budget_drops",
                                    n_denied))
+        # recirculation-port traffic = what entered the lane this step
+        p, b = _alive_stats(lane)
+        tel["recirc_pkts"] += p
+        tel["recirc_bytes"] += b
         nf_in = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), rout, out)
         if t <= n_real:
             sent.append(nf_in)
-        srv_bytes += alive_bytes(nf_in)
+        p, b = _alive_stats(nf_in)
+        tel["to_server_pkts"] += p
+        tel["to_server_bytes"] += b
         chain_states, nf_out, dropped, _cycles = chain.run(chain_states, nf_in)
         if explicit_drops:
             nf_out = to_explicit_drops(nf_out, dropped)
@@ -198,20 +222,26 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
             slot = t % window
             returning = ring[slot]
             ring[slot] = nf_out
-        srv_bytes += alive_bytes(returning)
+        p, b = _alive_stats(returning)
+        tel["from_server_pkts"] += p
+        tel["from_server_bytes"] += b
         state, m = merge(cfg, state, returning, use_kernel=use_kernel)
         if t >= window:
             merged.append(m)
-        ret_bytes += alive_bytes(m)
+        p, b = _alive_stats(m)
+        tel["merged_pkts"] += p
+        tel["merged_bytes"] += b
 
+    telemetry = LinkTelemetry(**tel)
     return SimResult(
         merged=merged,
         state=state,
         sent_to_server=sent,
         counters=C.as_dict(state.counters),
-        srv_bytes=srv_bytes,
-        wire_bytes=wire_bytes,
-        ret_bytes=ret_bytes,
+        srv_bytes=telemetry.srv_bytes,
+        wire_bytes=telemetry.wire_bytes,
+        ret_bytes=telemetry.merged_bytes,
+        telemetry=telemetry,
     )
 
 

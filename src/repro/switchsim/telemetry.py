@@ -1,0 +1,86 @@
+"""Per-link byte/packet telemetry for the switch<->server wire (DESIGN.md §7).
+
+The engine's original accounting was three aggregate byte totals (wire in,
+server link both directions, merged out) — enough for goodput arithmetic but
+too coarse to model what actually *arrives at the NF server*: the host model
+(``repro.hostmodel``) needs per-direction byte AND packet counts, because
+PCIe/DMA cost has a per-packet component (TLP headers, descriptor fetches)
+on top of the per-byte one (pcie-bench; NFSlicer, PAPERS.md).
+
+``LinkTelemetry`` is that struct: exact int totals for every link a packet
+can traverse in one pipe —
+
+  * ``wire``        generator -> switch ingress (every offered packet);
+  * ``to_server``   switch -> server, post-Split (header-only for parked
+                    packets, full packet + 7B PP header for ENB=0);
+  * ``from_server`` server -> switch, the returning direction (NF-chain
+                    survivors, still header-only when parked);
+  * ``recirc``      the recirculation port (packets admitted into the
+                    engine's lane, paper §6.2.5);
+  * ``merged``      switch egress after Merge (full packets again).
+
+Under §6.3.2 steering one pipe fronts one NF server, so per-pipe telemetry
+IS per-server telemetry: ``PipesResult.per_pipe_telemetry`` feeds the
+host model's per-server PCIe/DMA accounting directly.
+
+The engine accumulates these on-device as per-step int32 ys, summed
+host-side in int64; ``simulate_loop`` mirrors the accumulation points
+exactly, so the engine≡loop bit-exactness oracle (tests/test_engine.py,
+tests/test_recirc.py) covers the telemetry too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkTelemetry:
+    """Exact per-link totals for one pipe (or the cross-pipe sum).
+
+    All fields are plain ints; ``bytes`` count on-wire bytes of alive
+    packets (42B header + optional 7B PP header + payload), ``pkts`` count
+    alive packets, at the same accumulation point.
+    """
+
+    wire_pkts: int = 0
+    wire_bytes: int = 0
+    to_server_pkts: int = 0
+    to_server_bytes: int = 0
+    from_server_pkts: int = 0
+    from_server_bytes: int = 0
+    recirc_pkts: int = 0
+    recirc_bytes: int = 0
+    merged_pkts: int = 0
+    merged_bytes: int = 0
+
+    @property
+    def srv_bytes(self) -> int:
+        """Server-link bytes, both directions (the goodput denominator)."""
+        return self.to_server_bytes + self.from_server_bytes
+
+    @property
+    def srv_pkts(self) -> int:
+        return self.to_server_pkts + self.from_server_pkts
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def __add__(self, other: "LinkTelemetry") -> "LinkTelemetry":
+        if not isinstance(other, LinkTelemetry):
+            return NotImplemented
+        return LinkTelemetry(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(LinkTelemetry)})
+
+
+# Field names in declaration order — the single source of truth for the
+# engine's ys keys and the loop mirrors' accumulator keys.
+TEL_FIELDS = tuple(f.name for f in dataclasses.fields(LinkTelemetry))
+
+
+def sum_telemetry(parts) -> LinkTelemetry:
+    """Cross-pipe aggregation: the ToR-level totals of per-server links."""
+    total = LinkTelemetry()
+    for p in parts:
+        total = total + p
+    return total

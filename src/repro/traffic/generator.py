@@ -44,6 +44,18 @@ class Workload:
     def mean_pkt_bytes(self) -> float:
         return float((self.sizes * self.probs).sum())
 
+    def splittable_share(self, min_park_len: int = 160,
+                         park_bytes: int = 160) -> float:
+        """Fraction of offered wire bytes Split can park: expected parked
+        bytes / expected packet bytes.  The PCIe-load reduction on the NF
+        server is monotone in this share (DESIGN.md §7) — it is the
+        workload-side knob the host-model benchmark sweeps."""
+        parked = sum(
+            p * min(s - HDR_BYTES, park_bytes)
+            for s, p in zip(self.sizes, self.probs)
+            if s - HDR_BYTES >= min_park_len)
+        return float(parked) / self.mean_pkt_bytes
+
     def sample_sizes(self, key: jax.Array, n: int) -> jax.Array:
         idx = jax.random.choice(
             key, self.sizes.shape[0], (n,), p=jnp.asarray(self.probs))

@@ -106,5 +106,5 @@ def restore(ckpt_dir: str, step: int, template, shardings=None):
         return jax.device_put(arr, sh) if sh is not None else arr
 
     if shardings is None:
-        return jax.tree.map(lambda l, t: place(l, t, None), tree, template)
+        return jax.tree.map(lambda v, t: place(v, t, None), tree, template)
     return jax.tree.map(place, tree, template, shardings)

@@ -14,11 +14,8 @@ shard_map collective form for a real mesh is ``quantized_psum``.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def init_error_state(params):

@@ -9,8 +9,6 @@ the param's PartitionSpec.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -29,7 +27,8 @@ class AdamWConfig:
 
 
 def init_opt_state(params) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -4,7 +4,6 @@ what launch/train.py executes."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
 import jax

@@ -33,6 +33,9 @@ def _assert_same_result(a, b):
     assert a.srv_bytes == b.srv_bytes
     assert a.wire_bytes == b.wire_bytes
     assert a.ret_bytes == b.ret_bytes
+    # per-link telemetry (DESIGN.md §7) is part of the oracle contract:
+    # every byte AND packet count per link must match bit-exactly
+    assert a.telemetry == b.telemetry
     np.testing.assert_array_equal(np.asarray(a.state.ptable),
                                   np.asarray(b.state.ptable))
 
@@ -115,6 +118,59 @@ class TestSteering:
         shards, stats = steer_pipes(pkts, 2, pipe_capacity=32, chunk=32)
         assert stats["overflow"] == 128 - int(jnp.sum(shards.alive))
         assert stats["overflow"] > 0
+
+
+class TestTelemetry:
+    """Per-link telemetry invariants (DESIGN.md §7)."""
+
+    def test_internal_consistency_single_pipe(self):
+        pkts = enterprise().make_batch(jax.random.key(20), 256, pmax=1024)
+        chain = Chain((MacSwap(),))
+        cfg = ParkConfig(capacity=256, max_exp=2, pmax=1024)
+        res = E.run_engine(cfg, chain, to_time_major(pkts, 64), window=2)
+        t = res.telemetry
+        # derived views agree with the struct
+        assert res.wire_bytes == t.wire_bytes
+        assert res.srv_fwd_bytes == t.to_server_bytes
+        assert res.srv_bytes == t.to_server_bytes + t.from_server_bytes
+        assert res.ret_bytes == t.merged_bytes
+        # MacSwap drops nothing: packet conservation per link
+        assert t.wire_pkts == 256
+        assert t.to_server_pkts == t.from_server_pkts == t.merged_pkts == 256
+        # parking shrinks the forward link, merge restores full size
+        assert t.to_server_bytes < t.wire_bytes
+        assert t.merged_bytes == t.wire_bytes
+        assert t.recirc_pkts == t.recirc_bytes == 0  # lane off
+
+    def test_per_pipe_telemetry_sums_to_aggregate(self):
+        from repro.switchsim.telemetry import sum_telemetry
+        pkts = enterprise().make_batch(jax.random.key(21), 512, pmax=512)
+        chain = Chain((MacSwap(),))
+        cfg = ParkConfig(capacity=128, max_exp=2, pmax=512)
+        shards, _ = steer_pipes(pkts, 4, chunk=64)
+        traces = jax.tree.map(
+            lambda a: a.reshape((4, a.shape[1] // 64, 64) + a.shape[2:]),
+            shards)
+        res = E.run_pipes(cfg, chain, traces, window=1)
+        assert len(res.per_pipe_telemetry) == 4
+        assert sum_telemetry(res.per_pipe_telemetry) == res.telemetry
+        assert res.telemetry.wire_pkts == 512
+        for p, tel in enumerate(res.per_pipe_telemetry):
+            assert tel.srv_bytes == res.per_pipe_srv_bytes[p]
+            assert tel.wire_bytes == res.per_pipe_wire_bytes[p]
+
+    def test_chain_drops_show_in_return_direction(self):
+        pkts = fixed(512).make_batch(jax.random.key(22), 256, pmax=1024)
+        rules = tuple(int(ip) for ip in
+                      np.unique(np.asarray(pkts.src_ip))[:64].tolist())
+        chain = Chain((Firewall(rules=rules), Nat()))
+        cfg = ParkConfig(capacity=512, max_exp=2, pmax=1024)
+        res = E.run_engine(cfg, chain, to_time_major(pkts, 64), window=1)
+        t = res.telemetry
+        assert t.to_server_pkts == t.wire_pkts          # all offered forward
+        assert t.from_server_pkts < t.to_server_pkts    # firewall dropped
+        assert t.merged_pkts == t.from_server_pkts      # healthy merge
+        assert t.merged_bytes == res.ret_bytes
 
 
 class TestMultiPipe:

@@ -1,0 +1,236 @@
+"""NF-server host model (DESIGN.md §7): PCIe/TLP arithmetic, NIC/DMA byte
+accounting fed by engine telemetry, per-server cycle budget, and the
+multi-server table slicing against the resources placement model."""
+import jax
+import pytest
+
+from repro.core.packet import HDR_BYTES, PP_HDR_BYTES, to_time_major
+from repro.core.park import ParkConfig
+from repro.hostmodel import (HostModel, PcieLink, baseline_dma, parked_dma,
+                             pcie_reduction, per_server_capacity,
+                             server_bound_pps, server_report,
+                             servers_per_pipe)
+from repro.nf.chain import Chain
+from repro.nf.macswap import MacSwap
+from repro.switchsim import engine as E
+from repro.switchsim import resources
+from repro.switchsim.perfmodel import ServerModel, digest, evaluate_host
+from repro.switchsim.telemetry import LinkTelemetry, sum_telemetry
+from repro.traffic.generator import enterprise, fixed
+
+
+class TestPcieLink:
+    """TLP + descriptor overhead arithmetic (pcie-bench style)."""
+
+    def test_effective_rate_gen3_x8(self):
+        link = PcieLink(gen=3, lanes=8)
+        assert link.raw_gbps == pytest.approx(64.0)
+        # 128b/130b encoding: ~63 Gbps byte-rate ceiling per direction
+        assert link.effective_gbps == pytest.approx(64.0 * 128 / 130)
+
+    def test_generation_scaling(self):
+        # Gen4 doubles Gen3; Gen2 pays 8b/10b
+        assert PcieLink(gen=4, lanes=8).raw_gbps == \
+            2 * PcieLink(gen=3, lanes=8).raw_gbps
+        assert PcieLink(gen=2, lanes=8).effective_gbps == \
+            pytest.approx(5.0 * 8 * 0.8)
+
+    def test_tlp_count(self):
+        link = PcieLink(max_payload=256)
+        assert link.data_tlps(0) == 0
+        assert link.data_tlps(1) == 1
+        assert link.data_tlps(103) == 1     # PayloadPark header packet
+        assert link.data_tlps(256) == 1
+        assert link.data_tlps(257) == 2
+        assert link.data_tlps(1492) == 6
+
+    def test_bus_bytes_per_packet_exact(self):
+        link = PcieLink(max_payload=256, tlp_overhead=24, desc_bytes=16)
+        # one data TLP + descriptor fetch + writeback (each 16B + 24B hdr)
+        assert link.dma_bus_bytes(103) == 103 + 24 + 2 * (16 + 24)
+        # 1492B = 6 TLPs
+        assert link.dma_bus_bytes(1492) == 1492 + 6 * 24 + 80
+        assert link.dma_bus_bytes(0) == 0
+
+    def test_aggregate_matches_per_packet_for_fixed_sizes(self):
+        link = PcieLink()
+        n = 37
+        assert link.bus_bytes(n, n * 512) == n * link.dma_bus_bytes(512)
+
+    def test_small_packets_cannot_sustain_40g(self):
+        """The §6.2.2 observation falls out: at ~103B the bus moves ~2x
+        the packet's bytes, well under 40G data throughput."""
+        link = PcieLink(gen=3, lanes=8)
+        assert link.data_gbps_at(103) < 40.0 < link.data_gbps_at(1492)
+
+    @pytest.mark.parametrize("kw", [
+        dict(gen=0), dict(gen=6), dict(lanes=3), dict(max_payload=32),
+        dict(tlp_overhead=-1),
+    ])
+    def test_bad_link_raises(self, kw):
+        with pytest.raises(ValueError):
+            PcieLink(**kw)
+
+
+class TestDmaAccounting:
+    """Header-only vs full-packet DMA bytes, from real engine telemetry."""
+
+    def _run(self, size, n=256, capacity=512):
+        pkts = fixed(size).make_batch(jax.random.key(0), n, pmax=2048)
+        cfg = ParkConfig(capacity=capacity, max_exp=2, pmax=2048)
+        return E.run_engine(cfg, Chain((MacSwap(),)),
+                            to_time_major(pkts, 64), window=1), n
+
+    def test_parked_rx_is_header_only(self):
+        res, n = self._run(512)
+        link = PcieLink()
+        dma = parked_dma(link, res.telemetry)
+        # every parked packet DMAs 42B hdr + 7B PP + (payload - 160) tail
+        expect = n * (512 - 160 + PP_HDR_BYTES)
+        assert dma.rx_bytes == expect
+        assert dma.tx_bytes == expect          # MacSwap returns them all
+        assert dma.rx_pkts == dma.tx_pkts == n
+
+    def test_baseline_rx_is_full_packet(self):
+        res, n = self._run(512)
+        dma = baseline_dma(PcieLink(), res.telemetry)
+        assert dma.rx_bytes == n * 512 == res.telemetry.wire_bytes
+        assert dma.tx_bytes == n * 512         # all survive, full size
+
+    def test_unsplittable_traffic_pays_pp_header(self):
+        res, n = self._run(150)  # payload 108 < 160: ENB=0, +7B each way
+        tel = res.telemetry
+        assert tel.to_server_bytes == n * (150 + PP_HDR_BYTES)
+        assert pcie_reduction(PcieLink(), tel) < 0  # parking costs here
+
+    def test_reduction_in_paper_band_for_splittable_sizes(self):
+        link = PcieLink()
+        last = 1.0
+        for size in (256, 384, 512, 1024, 1492):
+            res, _ = self._run(size)
+            red = pcie_reduction(link, res.telemetry)
+            assert 0.02 <= red <= 0.58, (size, red)
+            assert red <= last  # monotone: bigger packets park less share
+            last = red
+
+    def test_reduction_below_raw_byte_saving(self):
+        """Per-packet DMA overheads do not shrink with parking, so the
+        bus-load reduction is strictly below the link-byte saving."""
+        res, _ = self._run(256)
+        tel = res.telemetry
+        byte_saving = 1 - (tel.to_server_bytes + tel.from_server_bytes) / \
+            (tel.wire_bytes + tel.merged_bytes)
+        assert pcie_reduction(PcieLink(), tel) < byte_saving
+
+
+class TestServerBudget:
+    def test_data_movement_bounds_pps(self):
+        """More DMA'd bytes per packet -> fewer pps from the same cores."""
+        hm = HostModel()
+        small = server_bound_pps(hm, [50.0], 103, 103)
+        large = server_bound_pps(hm, [50.0], 1492, 1492)
+        assert small.pps > large.pps
+        assert small.cycles_per_pkt < large.cycles_per_pkt
+
+    def test_cycles_include_all_three_terms(self):
+        hm = HostModel(overhead_cycles=60.0, cycles_per_byte=0.2)
+        b = server_bound_pps(hm, [300.0], 100, 100)
+        assert b.cycles_per_pkt == pytest.approx(300 + 60 + 0.2 * 200)
+
+    def test_heavy_nf_is_cpu_bound(self):
+        b = server_bound_pps(HostModel(), [570.0], 103, 103)
+        assert b.bottleneck == "cpu"
+
+    def test_byte_heavy_traffic_is_pcie_bound(self):
+        hm = HostModel(cpu_ghz=100.0, dma_txn_mpps=1e6)  # remove other caps
+        b = server_bound_pps(hm, [50.0], 1492, 103)
+        assert b.bottleneck == "pcie_rx"
+        assert b.caps["pcie_rx"] < b.caps["pcie_tx"]
+
+    def test_server_report_gain_direction(self):
+        pkts = fixed(512).make_batch(jax.random.key(1), 256, pmax=2048)
+        cfg = ParkConfig(capacity=512, max_exp=2, pmax=2048)
+        res = E.run_engine(cfg, Chain((MacSwap(),)),
+                           to_time_major(pkts, 64), window=1)
+        rep = server_report(HostModel(), res.telemetry, [50.0])
+        assert rep["server_pps_gain"] > 0
+        assert rep["pcie_reduction"] == \
+            pytest.approx(pcie_reduction(HostModel().link, res.telemetry))
+
+
+class TestServerSlicing:
+    """1..8 server table slicing must agree with resources._placement."""
+
+    def test_servers_per_pipe(self):
+        assert [servers_per_pipe(n) for n in range(1, 9)] == \
+            [1, 1, 1, 1, 2, 2, 2, 2]
+        with pytest.raises(ValueError):
+            servers_per_pipe(0)
+
+    @pytest.mark.parametrize("n_servers", list(range(1, 9)))
+    def test_slice_fits_placement_budget(self, n_servers):
+        """The per-server capacity is the largest whose *placed* SRAM cost
+        (whole 16KB blocks, replicated per server slice) fits the budget."""
+        cfg = ParkConfig()
+        frac = 0.40
+        cap = per_server_capacity(frac, cfg, n_servers)
+        assert cap > 0
+        spp = servers_per_pipe(n_servers)
+        budget = frac * resources.PIPE_SRAM_BYTES
+        cost = sum(resources._placement(cap, cfg.banks, spp)) \
+            * resources.SRAM_BLOCK_BYTES
+        over = sum(resources._placement(cap + 1, cfg.banks, spp)) \
+            * resources.SRAM_BLOCK_BYTES
+        assert cost <= budget < over
+
+    def test_more_servers_never_more_slots(self):
+        cfg = ParkConfig()
+        caps = [per_server_capacity(0.40, cfg, n) for n in range(1, 9)]
+        assert all(a >= b for a, b in zip(caps, caps[1:]))
+
+
+class TestTelemetryStruct:
+    def test_sum_and_add(self):
+        a = LinkTelemetry(wire_pkts=1, wire_bytes=100, to_server_pkts=1,
+                          to_server_bytes=60, from_server_pkts=1,
+                          from_server_bytes=60, merged_pkts=1,
+                          merged_bytes=100)
+        total = sum_telemetry([a, a, a])
+        assert total.wire_bytes == 300
+        assert total.srv_bytes == 360
+        assert (a + a).wire_pkts == 2
+        assert sum_telemetry([]) == LinkTelemetry()
+
+
+class TestPerfmodelBridge:
+    def test_parking_lowers_predicted_pcie_util(self):
+        m = ServerModel(link_gbps=40.0)
+        chain = [46.0, 80.0]
+        d_base = digest([512], [1.0], 160, 160, False)
+        d_park = digest([512], [1.0], 160, 160, True)
+        b = evaluate_host(m, d_base, chain, send_gbps=10.0)
+        p = evaluate_host(m, d_park, chain, send_gbps=10.0)
+        assert p.pcie_util < b.pcie_util
+        assert p.pcie_rx_gbps < b.pcie_rx_gbps
+        assert b.server_pps_cap > 0 and p.server_pps_cap > b.server_pps_cap
+
+    def test_host_cap_clamps_delivered_pps(self):
+        """A deliberately weak host bounds pps below the link model."""
+        from repro.hostmodel import PcieLink as PL
+        weak = HostModel(cpu_ghz=0.1)
+        m = ServerModel(link_gbps=40.0)
+        d = digest([512], [1.0], 160, 160, False)
+        hop = evaluate_host(m, d, [570.0], send_gbps=40.0, host=weak)
+        assert hop.server_bottleneck == "cpu"
+        assert hop.server_pps_cap < hop.op.pps
+        assert isinstance(weak.link, PL)
+
+
+class TestEnterpriseWorkload:
+    def test_splittable_share(self):
+        wl = enterprise()
+        s = wl.splittable_share()
+        # 70% of packets are splittable, each parking 160B of ~880B mean
+        assert s == pytest.approx(0.70 * 160 / wl.mean_pkt_bytes)
+        assert fixed(256).splittable_share() == pytest.approx(160 / 256)
+        assert fixed(190).splittable_share() == 0.0

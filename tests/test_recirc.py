@@ -42,6 +42,9 @@ def _assert_same_result(a, b):
     assert a.srv_bytes == b.srv_bytes
     assert a.wire_bytes == b.wire_bytes
     assert a.ret_bytes == b.ret_bytes
+    # per-link telemetry (DESIGN.md §7) must match bit-exactly — including
+    # the recirculation-port tallies the lane adds in recirc mode
+    assert a.telemetry == b.telemetry
 
 
 class TestSecondPass:
@@ -182,6 +185,23 @@ class TestEngineRecirc:
             b = simulate_loop(cfg, chain, pkts, window=3, chunk=64,
                               explicit_drops=ed)
             _assert_same_result(a, b)
+
+    def test_recirc_port_telemetry(self):
+        """The lane's admissions are metered as recirculation-port traffic;
+        engine and loop mirror agree field-for-field."""
+        pkts = fixed(500).make_batch(jax.random.key(16), 256, pmax=1024)
+        chain = Chain((MacSwap(),))
+        cfg = ParkConfig(capacity=256, max_exp=4, pmax=1024,
+                         recirculation=True)
+        res = E.run_engine(cfg, chain, to_time_major(pkts, 64), window=2)
+        t = res.telemetry
+        assert t.recirc_pkts == res.counters["recirculations"]
+        assert t.recirc_pkts > 0
+        assert t.recirc_bytes > 0
+        # recirculated packets reach the server exactly once
+        assert t.to_server_pkts == 256
+        loop = simulate_loop(cfg, chain, pkts, window=2, chunk=64)
+        assert loop.telemetry == t
 
     def test_off_still_matches_seed_loop(self):
         """Recirculation OFF (including a recirc-capable config with the
