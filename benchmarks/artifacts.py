@@ -1,28 +1,42 @@
-"""BENCH_*.json artifact schema shared by the benchmark writers and the
-figures consumer.
+"""BENCH_*.json artifact schema shared by the benchmark writers, the
+figures consumer and the CI regression gate.
 
 Every benchmark that contributes to the per-commit trajectory writes one
 ``BENCH_<name>.json`` via ``write_bench_json`` (CI uploads them as
-workflow artifacts), and ``benchmarks/figures.py`` re-renders the rows
-from those files via ``load_bench_json`` — consuming the artifact instead
-of re-running the simulation, and failing loudly on a missing or
-malformed file.
+workflow artifacts), ``benchmarks/figures.py`` re-renders the rows from
+those files via ``load_bench_json``, and ``benchmarks/compare.py`` diffs
+them against the committed baselines under ``benchmarks/baselines/`` —
+failing CI when a metric drifts past its tolerance.
 
-Schema (version 1):
+Schema (version 2):
 
     {
-      "schema": 1,
+      "schema": 2,
       "bench": "<benchmark name>",
-      "rows": [{"name": str, "value": int|float, "derived": str}, ...],
-      "summary": {...}          # benchmark-specific headline numbers
+      "rows": [{"name": str,          # unique metric path, e.g.
+                                      #   "chain/datacenter_base/goodput_gain"
+                "value": int|float|str,
+                "derived": str,       # auxiliary context, never gated on
+                "scenario": str},     # optional: the ScenarioSpec.name this
+                                      #   row was measured on (schema v2)
+               ...],
+      "summary": {...},               # benchmark-specific headline numbers
+      "matrix": {                     # optional (schema v2): the declarative
+        "<scenario name>": {...}      #   ScenarioSpec fields behind each
+      }                               #   scenario, for artifact provenance
     }
+
+v1 -> v2: rows gained the optional ``scenario`` field and the top level
+gained the optional ``matrix`` block, both written by benches that run
+through ``repro.scenarios`` (the vmapped sweep runner).  ``load_bench_json``
+accepts only the current version; regenerate baselines when bumping.
 """
 from __future__ import annotations
 
 import json
 import os
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 class BenchArtifactError(RuntimeError):
@@ -30,19 +44,34 @@ class BenchArtifactError(RuntimeError):
 
 
 def rows_to_json(rows) -> list[dict]:
-    """Convert the benches' ``(name, value, derived)`` tuples."""
-    return [{"name": n, "value": v, "derived": str(d)} for n, v, d in rows]
+    """Convert the benches' row tuples: ``(name, value, derived)`` or
+    ``(name, value, derived, scenario)`` (schema v2)."""
+    out = []
+    for row in rows:
+        name, value, derived = row[0], row[1], row[2]
+        d = {"name": name, "value": value, "derived": str(derived)}
+        if len(row) > 3 and row[3] is not None:
+            d["scenario"] = str(row[3])
+        out.append(d)
+    return out
 
 
 def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
-                     ) -> dict:
-    """Write one benchmark artifact; returns the payload written."""
+                     matrix: dict | None = None) -> dict:
+    """Write one benchmark artifact; returns the payload written.
+
+    ``matrix`` maps scenario names to their declarative spec dicts
+    (``ScenarioSpec.as_dict()``) for provenance; omitted when the bench
+    does not run through the scenario subsystem.
+    """
     payload = {
         "schema": SCHEMA_VERSION,
         "bench": bench,
         "rows": rows_to_json(rows),
         "summary": summary or {},
     }
+    if matrix:
+        payload["matrix"] = matrix
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -69,11 +98,26 @@ def load_bench_json(path: str) -> dict:
     rows = payload.get("rows")
     if not isinstance(rows, list):
         raise BenchArtifactError(f"{path}: 'rows' must be a list")
+    seen = set()
     for i, row in enumerate(rows):
         if (not isinstance(row, dict) or "name" not in row
                 or "value" not in row):
             raise BenchArtifactError(
                 f"{path}: rows[{i}] must be an object with name/value")
+        if "scenario" in row and not isinstance(row["scenario"], str):
+            raise BenchArtifactError(
+                f"{path}: rows[{i}].scenario must be a string")
+        if row["name"] in seen:
+            raise BenchArtifactError(
+                f"{path}: duplicate row name {row['name']!r}")
+        seen.add(row["name"])
     if not isinstance(payload.get("summary", {}), dict):
         raise BenchArtifactError(f"{path}: 'summary' must be an object")
+    if not isinstance(payload.get("matrix", {}), dict):
+        raise BenchArtifactError(f"{path}: 'matrix' must be an object")
     return payload
+
+
+def row_map(payload: dict) -> dict[str, dict]:
+    """Rows keyed by name (names are unique per load_bench_json)."""
+    return {r["name"]: r for r in payload["rows"]}

@@ -8,49 +8,41 @@ streams a workload through the scanned engine, takes the per-link byte/
 packet telemetry (DESIGN.md §7), and feeds it to ``repro.hostmodel``'s
 PCIe/DMA accounting (TLP + descriptor overheads included).
 
-Two sweeps:
+Both sweeps are scenario families (repro.scenarios.matrix) executed by
+the vmapped sweep runner — the size sweep's fixed-size and enterprise
+points share one compiled engine (DESIGN.md §8):
 
-  * **size sweep** — fixed 256..1492 B packets plus the enterprise
-    workload on a MacSwap chain (no chain drops, so the reduction is a
-    pure function of the parked share).  Asserts every reduction lands in
-    the paper's 2-58% band AND is monotone in the workload's
-    splittable-payload share; each run is re-checked bit-identical
-    against the host-loop oracle (telemetry included).
-  * **server sweep** — 1..8 NF servers (one per-port pipe each, §6.3.2)
-    on enterprise traffic through a dropping FW->NAT chain, with each
-    server's lookup-table slice taken from the §6.2.3 placement model
-    (``hostmodel.per_server_capacity``).  Reports aggregate + per-server
-    PCIe reduction and the cycle-budget server pps bound.
+  * **size sweep** (``hostmodel_sizes``) — fixed 256..1492 B packets plus
+    the enterprise workload on a MacSwap chain (no chain drops, so the
+    reduction is a pure function of the parked share).  Asserts every
+    reduction lands in the paper's 2-58% band AND is monotone in the
+    workload's splittable-payload share; each run is re-checked against
+    the host-loop oracle (counters + telemetry).
+  * **server sweep** (``hostmodel_servers``) — 1..8 NF servers (one
+    per-port pipe each, §6.3.2) on enterprise traffic through a dropping
+    FW->NAT chain, with each server's lookup-table slice taken from the
+    §6.2.3 placement model (``hostmodel.per_server_capacity``).  Reports
+    aggregate + per-server PCIe reduction and the cycle-budget server pps
+    bound.
 
     PYTHONPATH=src python benchmarks/bench_hostmodel.py
     PYTHONPATH=src python benchmarks/bench_hostmodel.py --tiny --json BENCH_hostmodel.json
 
 Prints ``name,value,derived`` CSV rows like the other benches; ``--json``
-additionally writes the BENCH_hostmodel.json artifact (benchmarks/
-artifacts.py schema) that CI uploads and ``figures.py`` consumes.
+additionally writes the schema-v2 BENCH_hostmodel.json artifact
+(benchmarks/artifacts.py) that CI uploads and gates via compare.py.
 """
 from __future__ import annotations
 
 import argparse
-
-import jax
-import numpy as np
 
 try:
     from benchmarks.artifacts import write_bench_json
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
     from artifacts import write_bench_json
 
-from repro.core.packet import to_time_major
-from repro.core.park import ParkConfig
-from repro.hostmodel import HostModel, server_report, per_server_capacity
-from repro.nf.chain import Chain
-from repro.nf.firewall import Firewall
-from repro.nf.macswap import MacSwap
-from repro.nf.nat import Nat
-from repro.switchsim import engine as E
-from repro.switchsim.simulate import simulate_loop
-from repro.traffic.generator import enterprise, fixed, steer_pipes
+import repro.scenarios as S
+from repro.hostmodel import HostModel, server_report
 
 BAND_PCT = (2.0, 58.0)  # the paper's PCIe-load reduction band (abstract)
 
@@ -63,46 +55,34 @@ def _check_band(name: str, red_pct: float) -> None:
             f"[{lo}, {hi}]%: {red_pct:.2f}%")
 
 
-def _verify_oracle(cfg, chain, pkts, res, window, chunk, label):
-    """Engine ≡ host-loop, telemetry included (the acceptance re-check)."""
-    loop = simulate_loop(cfg, chain, pkts, window=window, chunk=chunk)
-    if not (res.telemetry == loop.telemetry
-            and res.counters == loop.counters):
-        raise SystemExit(
-            f"engine telemetry diverged from loop oracle @{label}:\n"
-            f"  engine: {res.telemetry}\n  loop:   {loop.telemetry}")
-
-
-def bench_sizes(sizes, n_pkts, chunk, window, capacity, pmax, host):
+def bench_sizes(tiny, host):
     """Fixed-size + enterprise sweep on one pipe; band + monotonicity."""
-    chain = Chain((MacSwap(),))
-    cfg = ParkConfig(capacity=capacity, max_exp=2, pmax=pmax)
+    specs = S.family("hostmodel_sizes", tiny=tiny)
+    results = S.run_matrix(specs)
     rows = []
     runs = []  # (splittable share, reduction %, workload name)
-    workloads = [fixed(s) for s in sizes] + [enterprise()]
-    for i, wl in enumerate(workloads):
-        pkts = wl.make_batch(jax.random.key(i), n_pkts, pmax=pmax)
-        res = E.run_engine(cfg, chain, to_time_major(pkts, chunk),
-                           window=window)
-        _verify_oracle(cfg, chain, pkts, res, window, chunk, wl.name)
-        rep = server_report(host, res.telemetry, chain.cycle_costs())
+    for spec, res in zip(specs, results):
+        S.verify_oracle(res)  # engine == loop, counters + telemetry
+        rep = server_report(host, res.telemetry, res.nf_cycles)
         red_pct = 100.0 * rep["pcie_reduction"]
+        cfg = spec.park_config()
+        wl = S.resolve_workload(spec.workload)
         share = wl.splittable_share(cfg.min_park_len, cfg.park_bytes)
-        _check_band(wl.name, red_pct)
-        runs.append((share, red_pct, wl.name))
+        _check_band(spec.name, red_pct)
+        runs.append((share, red_pct, spec.name))
         rows.append((
-            f"hostmodel/{wl.name}/pcie_reduction_pct", round(red_pct, 2),
+            f"hostmodel/{spec.name}/pcie_reduction_pct", round(red_pct, 2),
             f"paper=2..58%;splittable_share={share:.3f};"
             f"bus_parked={rep['parked_bus_bytes']};"
             f"bus_base={rep['baseline_bus_bytes']};"
             f"server_pps_gain={rep['server_pps_gain']:.4f};"
             f"bottleneck={rep['bottleneck_parked']};"
-            f"oracle=identical"))
+            f"oracle=identical", spec.name))
         rows.append((
-            f"hostmodel/{wl.name}/server_pps_parked",
+            f"hostmodel/{spec.name}/server_pps_parked",
             round(rep["server_pps_parked"]),
             f"baseline={rep['server_pps_baseline']:.0f};"
-            f"bottleneck_base={rep['bottleneck_baseline']}"))
+            f"bottleneck_base={rep['bottleneck_baseline']}", spec.name))
     # The reduction must grow with the share of bytes Split can park.
     runs.sort(key=lambda r: r[0])
     for (s0, r0, n0), (s1, r1, n1) in zip(runs, runs[1:]):
@@ -111,55 +91,39 @@ def bench_sizes(sizes, n_pkts, chunk, window, capacity, pmax, host):
                 f"PCIe reduction not monotone in splittable share: "
                 f"{n0} (share {s0:.3f}) -> {r0:.2f}% but "
                 f"{n1} (share {s1:.3f}) -> {r1:.2f}%")
-    return rows, {r[2]: round(r[1], 2) for r in runs}
+    matrix = {s.name: s.as_dict() for s in specs}
+    return rows, {r[2]: round(r[1], 2) for r in runs}, matrix
 
 
-def bench_servers(server_counts, n_pkts, chunk, window, pmax, host,
-                  mem_frac=0.40):
+def bench_servers(tiny, host):
     """1..8 servers, one pipe each (§6.3.2), enterprise + FW->NAT."""
-    wl = enterprise()
-    pkts = wl.make_batch(jax.random.key(99), n_pkts, pmax=pmax)
-    rules = tuple(int(ip) for ip in
-                  np.unique(np.asarray(pkts.src_ip))[:20].tolist())
-    chain = Chain((Firewall(rules=rules), Nat()))
+    specs = S.family("hostmodel_servers", tiny=tiny)
+    results = S.run_matrix(specs)
     rows = []
     summary = {}
-    for n in server_counts:
-        capacity = per_server_capacity(mem_frac, ParkConfig(pmax=pmax), n)
-        cfg = ParkConfig(capacity=capacity, max_exp=2, pmax=pmax)
-        shards, stats = steer_pipes(pkts, n, chunk=chunk)
-        traces = jax.tree.map(
-            lambda a: a.reshape(
-                (n, a.shape[1] // chunk, chunk) + a.shape[2:]), shards)
-        res = E.run_pipes(cfg, chain, traces, window=window)
-        rep = server_report(host, res.telemetry, chain.cycle_costs())
+    for spec, res in zip(specs, results):
+        n = spec.pipes
+        rep = server_report(host, res.telemetry, res.nf_cycles)
         red_pct = 100.0 * rep["pcie_reduction"]
-        _check_band(f"servers{n}", red_pct)
-        per_srv = [100.0 * server_report(host, t, chain.cycle_costs())
+        _check_band(spec.name, red_pct)
+        per_srv = [100.0 * server_report(host, t, res.nf_cycles)
                    ["pcie_reduction"]
                    for t in res.per_pipe_telemetry]
         rows.append((
             f"hostmodel/servers{n}/pcie_reduction_pct", round(red_pct, 2),
             f"per_server_min={min(per_srv):.2f};"
             f"per_server_max={max(per_srv):.2f};"
-            f"table_slice={capacity};overflow={stats['overflow']};"
+            f"table_slice={spec.capacity};"
+            f"overflow={res.steer_stats['overflow']};"
             f"server_pps_parked={rep['server_pps_parked']:.0f};"
-            f"bottleneck={rep['bottleneck_parked']}"))
+            f"bottleneck={rep['bottleneck_parked']}", spec.name))
         summary[f"servers{n}"] = round(red_pct, 2)
-    return rows, summary
+    matrix = {s.name: s.as_dict() for s in specs}
+    return rows, summary, matrix
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--packets", type=int, default=4096)
-    ap.add_argument("--chunk", type=int, default=256)
-    ap.add_argument("--window", type=int, default=2)
-    ap.add_argument("--capacity", type=int, default=4096)
-    ap.add_argument("--pmax", type=int, default=2048)
-    ap.add_argument("--sizes", type=int, nargs="+",
-                    default=[256, 384, 512, 1024, 1492])
-    ap.add_argument("--servers", type=int, nargs="+",
-                    default=[1, 2, 4, 8])
     ap.add_argument("--pcie-gen", type=int, default=3)
     ap.add_argument("--pcie-lanes", type=int, default=8)
     ap.add_argument("--json", metavar="PATH",
@@ -168,26 +132,17 @@ def main() -> None:
                     help="CI smoke: 512 packets, chunk 64, 2 sizes, "
                          "2 server counts")
     args = ap.parse_args()
-    if args.tiny:
-        args.packets, args.chunk, args.capacity = 512, 64, 512
-        args.pmax = 2048
-        args.sizes = [256, 1492]
-        args.servers = [1, 2]
-    if args.packets % args.chunk:
-        ap.error(f"--packets ({args.packets}) must be a multiple of "
-                 f"--chunk ({args.chunk})")
     from repro.hostmodel import PcieLink
     host = HostModel(link=PcieLink(gen=args.pcie_gen, lanes=args.pcie_lanes))
 
-    rows, size_summary = bench_sizes(
-        args.sizes, args.packets, args.chunk, args.window, args.capacity,
-        args.pmax, host)
-    srv_rows, srv_summary = bench_servers(
-        args.servers, args.packets, args.chunk, args.window, args.pmax, host)
+    rows, size_summary, matrix = bench_sizes(args.tiny, host)
+    srv_rows, srv_summary, srv_matrix = bench_servers(args.tiny, host)
     rows += srv_rows
+    matrix.update(srv_matrix)
 
     print("name,value,derived")
-    for name, value, derived in rows:
+    for row in rows:
+        name, value, derived = row[0], row[1], row[2]
         print(f"{name},{value},{str(derived).replace(',', ';')}")
     if args.json:
         write_bench_json(args.json, "hostmodel", rows, summary=dict(
@@ -195,7 +150,7 @@ def main() -> None:
             pcie_reduction_pct={**size_summary, **srv_summary},
             monotone_in_splittable_share=True,
             pcie=dict(gen=args.pcie_gen, lanes=args.pcie_lanes),
-        ))
+        ), matrix=matrix)
 
 
 if __name__ == "__main__":

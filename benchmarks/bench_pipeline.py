@@ -6,6 +6,12 @@ one per-port pipe each, §6.3.2) and the goodput gain realized on the
 switch<->server links, both measured (byte counts from the simulation) and
 predicted (the calibrated analytic model fed with the measured digest).
 
+Since the scenario-matrix refactor (DESIGN.md §8) the sweep itself —
+expansion, trace steering, engine execution, per-point regrouping — is the
+``repro.scenarios`` runner; this bench only defines its grid from the CLI
+flags and formats the rows, so the pipes sweep here, the nightly matrix
+and CI smokes all execute through the same code path.
+
 At 1 pipe it also verifies the engine is wire-identical to the seed Python
 chunk loop on the same trace and reports the speedup over it.
 
@@ -18,12 +24,10 @@ Two effects worth knowing when reading the numbers:
   * per-pipe NF state is replicated (each pipe fronts its own server), so a
     single pipe's NAT flow table runs hotter at high flow counts than split
     pipes.  NAT flow expiry (EXP-style, see ``nf/nat.py``) reclaims idle
-    mappings, so ≥16k-flow single-pipe traces suffer only *transient* drops
-    while slots age out — the permanent-drop skew the seed NAT had is gone,
-    and ``goodput_gain`` is now drop-aware anyway (the baseline charges the
-    return trip only for chain survivors; the old 2x-wire figure is
-    reported as ``naive``).  The ``merges`` figure in the derived column
-    still exposes residual churn drops.
+    mappings, so >=16k-flow single-pipe traces suffer only *transient* drops
+    while slots age out; ``goodput_gain`` is drop-aware (the baseline
+    charges the return trip only for chain survivors; the old 2x-wire
+    figure is reported as ``naive``).
 
 ``--recirc`` runs the paper §6.2.5 experiment instead: a table-occupancy
 sweep comparing goodput gain with the recirculation lane off vs on
@@ -50,17 +54,12 @@ try:
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
     from artifacts import write_bench_json
 
+import repro.scenarios as S
 from repro.core.packet import to_time_major, wire_bytes
 from repro.hostmodel import HostModel, pcie_reduction
-from repro.core.park import ParkConfig
-from repro.nf.chain import Chain
-from repro.nf.firewall import Firewall
-from repro.nf.maglev import MaglevLB
-from repro.nf.nat import Nat
 from repro.switchsim import engine as E
 from repro.switchsim import perfmodel as P
 from repro.switchsim.simulate import simulate_loop
-from repro.traffic.generator import enterprise, steer_pipes
 
 
 def _cat(batches):
@@ -77,50 +76,38 @@ def _time(fn, repeats: int) -> float:
 
 def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
           verify: bool = True, explicit_drops: bool = False):
-    wl = enterprise()
-    pkts = wl.make_batch(jax.random.key(0), n_pkts, pmax=pmax)
-    rules = tuple(int(ip) for ip in
-                  np.unique(np.asarray(pkts.src_ip))[:20].tolist())
-    chain = Chain((Firewall(rules=rules), Nat()))
-    cfg = ParkConfig(capacity=capacity, max_exp=2, pmax=pmax)
+    specs = S.pipeline_grid(pipes_list, packets=n_pkts, chunk=chunk,
+                            window=window, pmax=pmax, capacity=capacity,
+                            explicit_drops=explicit_drops)
+    results = S.run_matrix(specs, time_runs=True, time_repeats=repeats)
     model = P.ServerModel()
     rows = []
+    matrix = {s.name: s.as_dict() for s in specs}
 
-    for n_pipes in pipes_list:
-        shards, steer_stats = steer_pipes(pkts, n_pipes, chunk=chunk)
-        traces = jax.tree.map(
-            lambda a: a.reshape(
-                (n_pipes, a.shape[1] // chunk, chunk) + a.shape[2:]), shards)
-
-        def run(traces=traces):
-            res = E.run_pipes(cfg, chain, traces, window=window,
-                              explicit_drops=explicit_drops)
-            jax.block_until_ready(res.merged.payload)
-            return res
-
-        res = run()
-        dt = _time(run, repeats)
-        pps = n_pkts / dt
-        gain = E.goodput_gain(res)
-        alive = sum(steer_stats["per_pipe_arrivals"]) \
-            - steer_stats["overflow"]
+    for spec, res in zip(specs, results):
+        n_pipes = spec.pipes
+        dt = res.wall_s
+        pps = n_pkts / dt if dt else 0.0
+        gain = res.gain
+        cfg = spec.park_config()
         d = P.measured_digest(
-            alive, res.wire_bytes, res.srv_fwd_bytes,
-            res.counters["splits"] / max(alive, 1))
+            res.alive_offered, res.telemetry.wire_bytes,
+            res.telemetry.to_server_bytes,
+            res.counters["splits"] / max(res.alive_offered, 1))
         base_d = P.TrafficDigest(d.mean_wire_bytes, d.mean_wire_bytes, 0.0)
         op_park = P.scale_pipes(
-            P.peak_goodput(model, d, chain.cycle_costs(),
+            P.peak_goodput(model, d, res.nf_cycles,
                            table_capacity=cfg.capacity, max_exp=cfg.max_exp,
                            parking=True), n_pipes)
         op_base = P.scale_pipes(
-            P.peak_goodput(model, base_d, chain.cycle_costs()), n_pipes)
+            P.peak_goodput(model, base_d, res.nf_cycles), n_pipes)
         model_gain = op_park.goodput_gbps / op_base.goodput_gbps - 1.0
         rows.append((
             f"pipeline/pipes{n_pipes}/pps", round(pps),
             f"wall_s={dt:.4f};splits={res.counters['splits']};"
             f"merges={res.counters['merges']};"
             f"premature={res.counters['premature_evictions']};"
-            f"overflow={steer_stats['overflow']}"))
+            f"overflow={res.steer_stats['overflow']}", spec.name))
         rows.append((
             f"pipeline/pipes{n_pipes}/goodput_gain",
             round(gain["goodput_gain"], 4),
@@ -130,9 +117,14 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
             f"model_goodput_gbps={op_park.goodput_gbps:.2f};"
             f"bottleneck={op_park.bottleneck};"
             f"pcie_reduction="
-            f"{pcie_reduction(HostModel().link, res.telemetry):.4f}"))
+            f"{pcie_reduction(HostModel().link, res.telemetry):.4f}",
+            spec.name))
 
     if verify and 1 in pipes_list:
+        spec1 = specs[list(pipes_list).index(1)]
+        pkts = S.make_packets(spec1)
+        chain = S.build_chain(spec1, pkts)
+        cfg = spec1.park_config()
         trace = to_time_major(pkts, chunk)
         eng = E.run_engine(cfg, chain, trace, window=window,
                            explicit_drops=explicit_drops, collect_sent=True)
@@ -155,16 +147,14 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
         identical = (np.array_equal(np.asarray(got), np.asarray(want))
                      and np.array_equal(np.asarray(gl), np.asarray(wl_))
                      and eng.counters == loop_res.counters
-                     and eng.srv_bytes == loop_res.srv_bytes
-                     and eng.wire_bytes == loop_res.wire_bytes
-                     and eng.ret_bytes == loop_res.ret_bytes)
+                     and eng.telemetry == loop_res.telemetry)
         rows.append((
             "pipeline/engine_vs_seed_loop/identical", int(identical),
             f"speedup={dt_loop / dt_eng:.2f}x;"
-            f"loop_s={dt_loop:.4f};engine_s={dt_eng:.4f}"))
+            f"loop_s={dt_loop:.4f};engine_s={dt_eng:.4f}", None))
         if not identical:
             raise SystemExit("engine output diverged from seed loop")
-    return rows
+    return rows, matrix
 
 
 def bench_recirc(n_pkts, chunk, window, pmax, recirc_frac=0.25):
@@ -173,69 +163,52 @@ def bench_recirc(n_pkts, chunk, window, pmax, recirc_frac=0.25):
     with the recirculation lane off vs on.  At high occupancy the lane must
     win strictly — retries rescue occupied-slot skips and second passes park
     up to 352B — or the bench exits non-zero.  Every recirculation-on run is
-    also checked bit-identical against the host-loop oracle."""
-    wl = enterprise()
-    pkts = wl.make_batch(jax.random.key(0), n_pkts, pmax=pmax)
-    rules = tuple(int(ip) for ip in
-                  np.unique(np.asarray(pkts.src_ip))[:20].tolist())
-    chain = Chain((Firewall(rules=rules), Nat(), MaglevLB()))
-    trace = to_time_major(pkts, chunk)
+    also checked against the host-loop oracle (counters + telemetry)."""
+    specs = S.recirc_grid(packets=n_pkts, chunk=chunk, window=window,
+                          pmax=pmax, recirc_frac=recirc_frac)
+    results = {r.spec.name: r for r in S.run_matrix(specs)}
     model = P.ServerModel()
-    inflight = max(window, 1) * chunk
-    sweeps = (("low", 8 * inflight), ("mid", inflight), ("high", inflight // 2))
+    matrix = {s.name: s.as_dict() for s in specs}
     rows = []
     gains = {}
-    for label, capacity in sweeps:
-        res = {}
-        for mode, on in (("off", False), ("on", True)):
-            # max_exp=4 keeps the full table out of the premature-eviction
-            # regime (the §6.2.5 experiment is occupancy pressure, not
-            # eviction losses; EXP=2 at 100% occupancy evicts in-flight
-            # payloads and drowns the recirculation signal in drops).
-            cfg = ParkConfig(capacity=capacity, max_exp=4, pmax=pmax,
-                             recirculation=on, recirc_frac=recirc_frac)
-            res[mode] = E.run_engine(cfg, chain, trace, window=window)
-            if on:
-                loop = simulate_loop(cfg, chain, pkts, window=window,
-                                     chunk=chunk)
-                if not (res[mode].counters == loop.counters
-                        and res[mode].srv_bytes == loop.srv_bytes
-                        and res[mode].ret_bytes == loop.ret_bytes):
-                    raise SystemExit(
-                        f"recirc engine diverged from loop oracle @{label}")
-        g = {m: E.goodput_gain(r) for m, r in res.items()}
-        gains[label] = {m: g[m]["goodput_gain"] for m in g}
-        c_on = res["on"].counters
+    for label in ("low", "mid", "high"):
+        off = results[f"occ_{label}_off"]
+        on = results[f"occ_{label}_on"]
+        capacity = off.spec.capacity
+        S.verify_oracle(on)  # raises OracleMismatch on divergence
+        gains[label] = {"off": off.gain["goodput_gain"],
+                        "on": on.gain["goodput_gain"]}
+        c_on = on.counters
         d = P.measured_digest(
-            n_pkts, res["on"].wire_bytes, res["on"].srv_fwd_bytes,
+            n_pkts, on.telemetry.wire_bytes, on.telemetry.to_server_bytes,
             c_on["splits"] / max(n_pkts, 1),
             recirc_per_pkt=c_on["recirculations"] / max(n_pkts, 1))
-        op = P.evaluate(model, d, chain.cycle_costs(), send_gbps=10.0)
-        occ = res["on"].peak_occupancy
+        op = P.evaluate(model, d, on.nf_cycles, send_gbps=10.0)
         rows.append((
             f"recirc/occ_{label}/gain_off",
             round(gains[label]["off"], 4),
             f"capacity={capacity};"
-            f"peak_occ={res['off'].peak_occupancy};"
-            f"skip_occupied={res['off'].counters['skip_occupied']}"))
+            f"peak_occ={off.peak_occupancy};"
+            f"skip_occupied={off.counters['skip_occupied']}",
+            off.spec.name))
         rows.append((
             f"recirc/occ_{label}/gain_on",
             round(gains[label]["on"], 4),
-            f"capacity={capacity};peak_occ={occ};"
+            f"capacity={capacity};peak_occ={on.peak_occupancy};"
             f"recirculations={c_on['recirculations']};"
             f"budget_drops={c_on['recirc_budget_drops']};"
             f"skip_occupied={c_on['skip_occupied']};"
             f"premature={c_on['premature_evictions']};"
-            f"model_lat_us={op.latency_us:.2f}"))
+            f"model_lat_us={op.latency_us:.2f}", on.spec.name))
         rows.append((
             f"recirc/occ_{label}/gain_delta",
             round(gains[label]["on"] - gains[label]["off"], 4),
-            f"recirc_frac={recirc_frac}"))
+            f"recirc_frac={recirc_frac}", None))
     if not gains["high"]["on"] > gains["high"]["off"]:
         raise SystemExit(
             f"recirculation gain not above baseline at high occupancy: "
             f"on={gains['high']['on']:.4f} off={gains['high']['off']:.4f}")
-    return rows
+    return rows, matrix
 
 
 def main() -> None:
@@ -283,19 +256,20 @@ def main() -> None:
         ap.error(f"--packets ({args.packets}) must be a multiple of "
                  f"--chunk ({args.chunk})")
     if args.recirc:
-        rows = bench_recirc(args.packets, args.chunk, args.window,
-                            args.pmax, recirc_frac=args.recirc_frac)
+        rows, matrix = bench_recirc(args.packets, args.chunk, args.window,
+                                    args.pmax, recirc_frac=args.recirc_frac)
     else:
-        rows = bench(args.pipes, args.packets, args.chunk, args.window,
-                     args.capacity, args.pmax, args.repeats,
-                     verify=not args.no_verify,
-                     explicit_drops=args.explicit_drops)
+        rows, matrix = bench(args.pipes, args.packets, args.chunk,
+                             args.window, args.capacity, args.pmax,
+                             args.repeats, verify=not args.no_verify,
+                             explicit_drops=args.explicit_drops)
     print("name,value,derived")
-    for name, value, derived in rows:
+    for row in rows:
+        name, value, derived = row[0], row[1], row[2]
         print(f"{name},{value},{str(derived).replace(',', ';')}")
     if args.json:
         write_bench_json(args.json, "recirc" if args.recirc else "pipeline",
-                         rows)
+                         rows, matrix=matrix)
 
 
 if __name__ == "__main__":

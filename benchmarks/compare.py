@@ -1,0 +1,132 @@
+"""CI benchmark-regression gate: diff BENCH_*.json against baselines.
+
+The per-commit benchmark trajectory used to be write-only — CI uploaded
+the artifacts but nothing failed when a number drifted.  This gate closes
+that hole: every candidate artifact is compared row-by-row against the
+committed reference under ``benchmarks/baselines/`` with per-metric
+relative tolerances, and any violation (or schema mismatch, or a baseline
+row missing from the candidate) exits non-zero with a per-row diff.
+
+Tolerance rules (first regex match on the row name wins):
+
+  * timing metrics (pps, wall seconds, speedups) are NOT gated — they are
+    runner-hardware noise, reported for the trajectory only;
+  * exactness metrics (oracle ``identical`` flags) must match bit-for-bit;
+  * ratio metrics (gains/savings/reductions/deltas) get a relative band
+    plus a small absolute floor (ratios near zero would otherwise gate on
+    relative noise);
+  * everything else (byte totals, counters) gets a tight relative band.
+
+The simulation is deterministic (fixed PRNG keys, deterministic Maglev
+table), so in practice equal code produces equal artifacts; the bands
+absorb cross-version JAX drift without letting a real regression through.
+
+    python benchmarks/compare.py BENCH_pipeline.json BENCH_chain.json
+    python benchmarks/compare.py --baselines benchmarks/baselines BENCH_*.json
+
+Exit codes: 0 ok, 1 metric regression, 2 schema/IO mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+try:
+    from benchmarks.artifacts import (BenchArtifactError, load_bench_json,
+                                      row_map)
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from artifacts import BenchArtifactError, load_bench_json, row_map
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
+
+# (name regex, rtol, atol); rtol None = not gated.  First match wins.
+# Timing patterns are anchored to full path segments — an unanchored
+# "wall" would silently exempt any future "firewall" metric from the gate.
+TOLERANCES: list[tuple[str, float | None, float]] = [
+    (r"(/pps$|/wall_s$|/speedup$|_s$)", None, 0.0),
+    (r"identical", 0.0, 0.0),
+    (r"(gain|saving|reduction|delta|uplift)", 0.08, 0.02),
+    (r"", 0.05, 0.0),
+]
+
+
+def tolerance_for(name: str) -> tuple[float | None, float]:
+    for pat, rtol, atol in TOLERANCES:
+        if re.search(pat, name):
+            return rtol, atol
+    raise AssertionError("unreachable: catch-all tolerance")
+
+
+def _is_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def compare_rows(baseline: dict, candidate: dict) -> list[str]:
+    """Per-row diffs between two loaded artifacts; empty list = pass."""
+    problems = []
+    base_rows, cand_rows = row_map(baseline), row_map(candidate)
+    for name, brow in base_rows.items():
+        if name not in cand_rows:
+            problems.append(f"MISSING  {name}: in baseline, not in candidate")
+            continue
+        bval, cval = brow["value"], cand_rows[name]["value"]
+        rtol, atol = tolerance_for(name)
+        if rtol is None:
+            continue
+        if _is_number(bval) and _is_number(cval):
+            lim = max(rtol * abs(bval), atol)
+            if abs(cval - bval) > lim:
+                problems.append(
+                    f"DRIFT    {name}: baseline={bval} candidate={cval} "
+                    f"(|delta|={abs(cval - bval):.6g} > tol={lim:.6g})")
+        elif bval != cval:
+            problems.append(
+                f"MISMATCH {name}: baseline={bval!r} candidate={cval!r}")
+    for name in sorted(set(cand_rows) - set(base_rows)):
+        problems.append(
+            f"NEW      {name}: not in baseline (regenerate baselines "
+            f"to start gating it)")
+    return problems
+
+
+def compare_files(baseline_path: str, candidate_path: str) -> list[str]:
+    baseline = load_bench_json(baseline_path)
+    candidate = load_bench_json(candidate_path)
+    if baseline["bench"] != candidate["bench"]:
+        return [f"MISMATCH bench name: baseline={baseline['bench']!r} "
+                f"candidate={candidate['bench']!r}"]
+    return compare_rows(baseline, candidate)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("candidates", nargs="+", metavar="BENCH_JSON",
+                    help="candidate artifacts written by this commit's "
+                         "bench runs")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="directory of committed reference artifacts "
+                         "(matched by basename)")
+    args = ap.parse_args(argv)
+
+    failed = False
+    for cand in args.candidates:
+        base = os.path.join(args.baselines, os.path.basename(cand))
+        try:
+            problems = compare_files(base, cand)
+        except BenchArtifactError as e:
+            print(f"compare: {e}", file=sys.stderr)
+            return 2
+        gating = [p for p in problems if not p.startswith("NEW")]
+        label = "FAIL" if gating else "ok"
+        print(f"[{label}] {cand} vs {base}: "
+              f"{len(gating)} regression(s)")
+        for p in problems:
+            print(f"  {p}")
+        failed |= bool(gating)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

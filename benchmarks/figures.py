@@ -9,11 +9,16 @@ side-by-side comparison; EXPERIMENTS.md discusses the deltas.
 
 Run as a script, this module is the *consumer* of the per-commit
 ``BENCH_*.json`` artifacts (benchmarks/artifacts.py schema) written by
-``bench_pipeline.py --json`` / ``bench_hostmodel.py --json``: it re-renders
-their rows without re-running any simulation, and exits non-zero on a
-missing or malformed artifact instead of silently rendering nothing:
+``bench_pipeline.py --json`` / ``bench_hostmodel.py --json`` /
+``bench_chain.py --json``: it re-renders their rows without re-running any
+simulation, and exits non-zero on a missing or malformed artifact instead
+of silently rendering nothing.  When a ``chain`` artifact is present (or
+``--require-chain`` demands one) it additionally renders the §7 chain
+table — and because that table *references* specific scenario rows, a row
+missing from the artifact is a hard error (exit 2), not a silently
+shorter table:
 
-    PYTHONPATH=src python benchmarks/figures.py BENCH_pipeline.json BENCH_hostmodel.json
+    PYTHONPATH=src python benchmarks/figures.py BENCH_pipeline.json BENCH_chain.json
 """
 from __future__ import annotations
 
@@ -25,9 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.artifacts import BenchArtifactError, load_bench_json
+    from benchmarks.artifacts import (BenchArtifactError, load_bench_json,
+                                      row_map)
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
-    from artifacts import BenchArtifactError, load_bench_json
+    from artifacts import BenchArtifactError, load_bench_json, row_map
 
 from repro.core.park import ParkConfig
 from repro.nf.chain import Chain
@@ -265,11 +271,52 @@ ALL_FIGURES = [
 ]
 
 
+# The §7 chain table references these *measured* scenario rows of the
+# ``chain`` artifact (written by both bench_chain.py and the run.py
+# matrix driver); the uplift column is derived from them.  A referenced
+# row absent from the artifact is a hard error — the consume path must
+# not render a silently thinner table (the pre-scenario-matrix
+# behaviour).
+SEC7_CHAIN_TABLE = [
+    ("datacenter", "chain/datacenter_base/goodput_gain",
+     "chain/datacenter_recirc/goodput_gain"),
+    ("enterprise", "chain/enterprise_base/goodput_gain",
+     "chain/enterprise_recirc/goodput_gain"),
+]
+
+
+def sec7_chain_table(payload: dict) -> list[str]:
+    """Render the §7 FW->NAT->LB table from a ``chain`` artifact.
+
+    Raises BenchArtifactError when any referenced scenario row is absent.
+    """
+    rows = row_map(payload)
+
+    def need(name):
+        if name not in rows:
+            raise BenchArtifactError(
+                f"chain artifact is missing referenced scenario row "
+                f"{name!r} (have {len(rows)} rows)")
+        return rows[name]["value"]
+
+    lines = [
+        "# §7 chain table: FW->NAT->LB goodput gain "
+        "(paper: +13%, +28% with recirculation on DC traffic)",
+        "# workload    | gain      | gain+recirc | uplift",
+    ]
+    for label, base_row, rec_row in SEC7_CHAIN_TABLE:
+        base, rec = need(base_row), need(rec_row)
+        lines.append(f"# {label:<11} | {100 * base:8.2f}% | "
+                     f"{100 * rec:10.2f}% | {100 * (rec - base):+.2f}%")
+    return lines
+
+
 def main(argv=None) -> None:
     """Render benchmark-trajectory rows from BENCH_*.json artifacts.
 
     Consumes the artifacts the benches wrote (no simulation re-run);
-    any missing or schema-violating file is a hard error (exit 2), not a
+    any missing or schema-violating file — or a chain artifact missing a
+    row the §7 table references — is a hard error (exit 2), not a
     silently empty figure.
     """
     ap = argparse.ArgumentParser(
@@ -277,9 +324,17 @@ def main(argv=None) -> None:
                     "artifacts written by benchmarks/bench_*.py --json.")
     ap.add_argument("artifacts", nargs="+", metavar="BENCH_JSON",
                     help="paths to BENCH_*.json files")
+    ap.add_argument("--require-chain", action="store_true",
+                    help="fail unless a 'chain' artifact (the §7 table "
+                         "source) is among the inputs")
     args = ap.parse_args(argv)
     try:
         payloads = [load_bench_json(p) for p in args.artifacts]
+        chain_payloads = [p for p in payloads if p["bench"] == "chain"]
+        if args.require_chain and not chain_payloads:
+            raise BenchArtifactError(
+                "no 'chain' artifact among the inputs (--require-chain)")
+        chain_tables = [sec7_chain_table(p) for p in chain_payloads]
     except BenchArtifactError as e:
         print(f"figures: {e}", file=sys.stderr)
         raise SystemExit(2)
@@ -288,6 +343,9 @@ def main(argv=None) -> None:
         for row in payload["rows"]:
             derived = str(row.get("derived", "")).replace(",", ";")
             print(f"{row['name']},{row['value']},{derived}")
+    for lines in chain_tables:
+        for line in lines:
+            print(line)
     for payload in payloads:
         for key, val in sorted(payload.get("summary", {}).items()):
             print(f"# {payload['bench']}/{key}: {val}")

@@ -176,7 +176,13 @@ def markdown_table(rows: list[dict]) -> str:
 
 
 def bench_rows() -> list[tuple]:
-    """Summary rows for benchmarks/run.py."""
+    """Roofline summary rows (``name, value, derived`` tuples).
+
+    Formerly glued into the seed-era run.py driver; now emitted as a
+    standalone BENCH_roofline.json artifact (``python benchmarks/
+    roofline.py --json BENCH_roofline.json``) so the artifact/figures/
+    compare tooling is the single consumption path for every benchmark.
+    """
     rows = []
     singles = [r for r in load_all(mesh="single") if not r.get("skipped")]
     if not singles:
@@ -197,7 +203,19 @@ def bench_rows() -> list[tuple]:
 
 
 if __name__ == "__main__":
-    import sys
-    mesh = sys.argv[1] if len(sys.argv) > 1 else None
-    rows = load_all(mesh=mesh)
-    print(markdown_table(rows))
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mesh", nargs="?", default=None,
+                    help="restrict to one mesh kind (e.g. 'single')")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the BENCH json artifact here "
+                         "(benchmarks/artifacts.py schema)")
+    args = ap.parse_args()
+    print(markdown_table(load_all(mesh=args.mesh)))
+    if args.json:
+        try:
+            from benchmarks.artifacts import write_bench_json
+        except ImportError:  # run as a script
+            from artifacts import write_bench_json
+        write_bench_json(args.json, "roofline", bench_rows())

@@ -1,32 +1,89 @@
-"""Benchmark driver: one function per paper table/figure + the beyond-paper
-serving/parking benchmark + the roofline summary.  Prints
-``name,value,derived`` CSV (deliverable d)."""
+"""Evaluation-matrix driver: run the registered scenario families.
+
+The seed-era ``run.py`` drove the analytic per-figure functions plus two
+hand-rolled sweeps — a second, drifting sweep path next to the bench
+scripts.  It is now a thin front-end over the scenario subsystem
+(``repro.scenarios``, DESIGN.md §8): every family in the registry is
+expanded, executed through the vmapped sweep runner, written as a
+schema-v2 ``BENCH_<family>.json`` artifact and printed as CSV rows.  This
+is the entry point the nightly CI matrix job runs at full scale.
+
+    PYTHONPATH=src python benchmarks/run.py                 # full matrix
+    PYTHONPATH=src python benchmarks/run.py --tiny          # smoke scale
+    PYTHONPATH=src python benchmarks/run.py --family chain --out-dir out/
+    PYTHONPATH=src python benchmarks/run.py --analytic      # + model figures
+
+``--analytic`` additionally renders the analytic per-figure rows
+(figures.ALL_FIGURES — model curves, no stateful sweep) the seed driver
+printed; the curated assertion benches (bench_pipeline / bench_hostmodel /
+bench_chain) remain the CI gates.
+"""
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
 
 def main() -> None:
-    t_start = time.time()
-    from benchmarks.figures import ALL_FIGURES
-    from benchmarks.bench_parking import core_throughput_rows, parking_rows
-    from benchmarks import roofline
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-scale geometry (repro.configs.sweeps.TINY)")
+    ap.add_argument("--family", nargs="+", metavar="NAME",
+                    help="run only these scenario families (default: all)")
+    ap.add_argument("--out-dir", metavar="DIR",
+                    help="write one BENCH_<family>.json per family here")
+    ap.add_argument("--analytic", action="store_true",
+                    help="also render the analytic model figures "
+                         "(figures.ALL_FIGURES)")
+    args = ap.parse_args()
 
-    rows = []
-    for fig in ALL_FIGURES:
+    import repro.scenarios as S
+    try:
+        from benchmarks.artifacts import write_bench_json
+    except ImportError:  # run as a script
+        from artifacts import write_bench_json
+
+    t_start = time.time()
+    families = args.family or S.names()
+    unknown = [f for f in families if f not in S.names()]
+    if unknown:
+        ap.error(f"unknown families {unknown}; registered: {S.names()}")
+
+    all_rows = []
+    for fam in families:
         t0 = time.time()
-        out = fig(); dt = time.time() - t0
-        rows.extend(out)
-        print(f"# {fig.__name__} ({dt:.1f}s)", file=sys.stderr)
-    rows.extend(parking_rows())
-    rows.extend(core_throughput_rows())
-    rows.extend(roofline.bench_rows())
+        specs = S.family(fam, tiny=args.tiny)
+        results = S.run_matrix(specs)
+        rows = []
+        for r in results:
+            rows.extend(S.default_rows(r, fam))
+        print(f"# {fam}: {len(specs)} scenarios, "
+              f"{time.time() - t0:.1f}s", file=sys.stderr)
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            write_bench_json(
+                os.path.join(args.out_dir, f"BENCH_{fam}.json"), fam, rows,
+                matrix={s.name: s.as_dict() for s in specs})
+        all_rows.extend(rows)
+
+    if args.analytic:
+        from benchmarks.figures import ALL_FIGURES
+        from benchmarks.bench_parking import (core_throughput_rows,
+                                              parking_rows)
+        for fig in ALL_FIGURES:
+            t0 = time.time()
+            all_rows.extend(fig())
+            print(f"# {fig.__name__} ({time.time() - t0:.1f}s)",
+                  file=sys.stderr)
+        all_rows.extend(parking_rows())
+        all_rows.extend(core_throughput_rows())
 
     print("name,value,derived")
-    for name, value, derived in rows:
-        d = str(derived).replace(",", ";")
-        print(f"{name},{value},{d}")
+    for row in all_rows:
+        name, value, derived = row[0], row[1], row[2]
+        print(f"{name},{value},{str(derived).replace(',', ';')}")
     print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
 
 

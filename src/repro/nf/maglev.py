@@ -19,11 +19,24 @@ from repro.core.packet import PacketBatch
 CYCLES = 120.0  # hash + table lookup + rewrite
 
 
+def _mix64(salt: int, b: int) -> int:
+    """Deterministic splitmix64 finalizer over (salt, backend).
+
+    Python's ``hash(str)`` is salted per process (PYTHONHASHSEED), which
+    would rebuild a *different* lookup table in every worker — breaking
+    cross-process backend stability and committed benchmark baselines.
+    """
+    x = (b * 0x9E3779B97F4A7C15 + salt * 0xBF58476D1CE4E5B9) & (1 << 64) - 1
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & (1 << 64) - 1
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & (1 << 64) - 1
+    return x ^ (x >> 31)
+
+
 def build_table(backends: tuple[int, ...], table_size: int) -> np.ndarray:
     """Maglev population: each backend fills preferred slots by (offset, skip)."""
     n = len(backends)
-    offset = np.array([hash(("o", b)) % table_size for b in backends])
-    skip = np.array([hash(("s", b)) % (table_size - 1) + 1 for b in backends])
+    offset = np.array([_mix64(1, b) % table_size for b in backends])
+    skip = np.array([_mix64(2, b) % (table_size - 1) + 1 for b in backends])
     entry = np.full(table_size, -1, np.int32)
     nxt = np.zeros(n, np.int64)
     filled = 0

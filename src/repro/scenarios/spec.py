@@ -1,0 +1,219 @@
+"""Declarative scenario specs and the grid expander (DESIGN.md §8).
+
+A ``ScenarioSpec`` names one point of the evaluation matrix: workload x
+NF chain x recirculation mode x pipes x table occupancy x trace geometry.
+It is a frozen, hashable value — no arrays, no callables — so specs can be
+grouped, deduplicated, serialized into BENCH_*.json artifacts, and used as
+compile-cache keys.  Everything runnable (packets, chains, ParkConfigs) is
+*derived* from the spec by pure functions in this module; the sweep runner
+(repro.scenarios.runner) is the only place that executes anything.
+
+Workloads are named tuples (``("fixed", 512)``, ``("enterprise",)``,
+``("datacenter",)``) resolved via ``resolve_workload``.  Chains are tuples
+of NF names (``("fw", "nat", "lb")``) resolved via ``build_chain``; the
+firewall's blocked list is drawn from the deterministic flow pool when the
+spec constrains flows (``flows > 0``), which makes the chain — and hence
+the compiled engine — identical across workload axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+
+from repro.core.park import ParkConfig
+from repro.core.packet import PacketBatch, to_time_major
+from repro.nf.chain import Chain
+from repro.nf.firewall import Firewall
+from repro.nf.macswap import MacSwap
+from repro.nf.maglev import MaglevLB
+from repro.nf.nat import Nat
+from repro.traffic import generator as T
+
+WorkloadSpec = tuple  # ("fixed", size) | ("enterprise",) | ("datacenter",)
+ChainSpec = tuple     # e.g. ("fw", "nat", "lb"); names below
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative point of the evaluation matrix.
+
+    ``name`` is the point's identity inside its family; artifact rows are
+    emitted as ``<family>/<name>/<metric>``.  ``flows`` > 0 constrains
+    ``src_ip`` to a deterministic ``flows``-IP pool (flow structure for
+    NAT/LB plus a workload-independent firewall rule set); 0 keeps the
+    seed benches' behaviour (random IPs, rules drawn from the traffic).
+    """
+
+    name: str
+    workload: WorkloadSpec = ("enterprise",)
+    chain: ChainSpec = ("fw", "nat")
+    pipes: int = 1
+    recirc: bool = False
+    recirc_frac: float = 0.25
+    capacity: int = 4096
+    max_exp: int = 2
+    packets: int = 16384
+    chunk: int = 256
+    window: int = 2
+    pmax: int = 2048
+    explicit_drops: bool = False
+    seed: int = 0
+    flows: int = 0
+    fw_rules: int = 20
+
+    def __post_init__(self):
+        if self.packets % self.chunk:
+            raise ValueError(
+                f"{self.name}: packets ({self.packets}) must be a multiple "
+                f"of chunk ({self.chunk})")
+        if self.pipes < 1:
+            raise ValueError(f"{self.name}: pipes must be >= 1")
+        resolve_workload(self.workload)  # validates the name eagerly
+        for nf in self.chain:
+            if nf not in _NF_NAMES:
+                raise ValueError(
+                    f"{self.name}: unknown NF {nf!r} (have {_NF_NAMES})")
+        if self.flows and "fw" in self.chain and self.fw_rules >= self.flows:
+            raise ValueError(
+                f"{self.name}: fw_rules ({self.fw_rules}) must be < flows "
+                f"({self.flows}) — blocking the whole pool drops 100% of "
+                f"the traffic")
+
+    def park_config(self) -> ParkConfig:
+        return ParkConfig(capacity=self.capacity, max_exp=self.max_exp,
+                          pmax=self.pmax, recirculation=self.recirc,
+                          recirc_frac=self.recirc_frac)
+
+    def as_dict(self) -> dict:
+        """JSON-ready form for the schema-v2 artifact ``matrix`` block."""
+        d = dataclasses.asdict(self)
+        d["workload"] = list(self.workload)
+        d["chain"] = list(self.chain)
+        return d
+
+
+def resolve_workload(ws: WorkloadSpec) -> T.Workload:
+    """Workload-spec tuple -> traffic.generator.Workload."""
+    kind = ws[0]
+    if kind == "fixed":
+        return T.fixed(int(ws[1]))
+    if kind == "enterprise":
+        return T.enterprise()
+    if kind == "datacenter":
+        return T.datacenter()
+    raise ValueError(f"unknown workload spec {ws!r}")
+
+
+def make_packets(spec: ScenarioSpec) -> PacketBatch:
+    """Deterministic traffic for one scenario point.
+
+    The PRNG key folds in only ``seed`` — two specs with equal
+    (workload, packets, pmax, flows, seed) produce bit-identical traffic
+    no matter how the rest of the grid differs, so recirc-on/off pairs
+    compare the same packets.
+    """
+    wl = resolve_workload(spec.workload)
+    key = jax.random.key(spec.seed)
+    pkts = wl.make_batch(key, spec.packets, pmax=spec.pmax)
+    if spec.flows:
+        ips, ports = T.flow_pool(spec.flows)
+        idx = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (spec.packets,), 0, spec.flows)
+        # both halves of the NAT flow key (src_ip, src_port) come from the
+        # pool, so repeat flows actually repeat at the NF chain
+        pkts = pkts.replace(src_ip=ips[idx], src_port=ports[idx])
+    return pkts
+
+
+def firewall_rules(spec: ScenarioSpec, pkts: PacketBatch) -> tuple[int, ...]:
+    """Blocked-IP list: from the flow pool when flows are constrained
+    (workload-independent -> chains shareable across workload axes),
+    otherwise the seed benches' rule source (first N unique src IPs)."""
+    if spec.flows:
+        ips, _ = T.flow_pool(spec.flows)
+        return tuple(int(ip) for ip in
+                     np.asarray(ips[:spec.fw_rules]).tolist())
+    return tuple(int(ip) for ip in
+                 np.unique(np.asarray(pkts.src_ip))[:spec.fw_rules].tolist())
+
+
+_NF_NAMES = ("fw", "nat", "lb", "macswap")
+
+
+def build_chain(spec: ScenarioSpec, pkts: PacketBatch) -> Chain:
+    """Chain-spec tuple -> runnable (and hashable) nf.chain.Chain."""
+    nfs = []
+    for nf in spec.chain:
+        if nf == "fw":
+            nfs.append(Firewall(rules=firewall_rules(spec, pkts)))
+        elif nf == "nat":
+            nfs.append(Nat())
+        elif nf == "lb":
+            nfs.append(MaglevLB())
+        elif nf == "macswap":
+            nfs.append(MacSwap())
+    return Chain(tuple(nfs))
+
+
+def steer(spec: ScenarioSpec, pkts: PacketBatch):
+    """Shard a scenario's traffic into its (P, T, chunk, ...) traces.
+
+    Single-pipe scenarios skip hashing entirely (identity + tail padding
+    via ``to_time_major``); multi-pipe scenarios go through the §6.3.2
+    flow steering.  Returns ``(traces, steer_stats)``.
+    """
+    if spec.pipes == 1:
+        trace = to_time_major(pkts, spec.chunk)
+        traces = jax.tree.map(lambda a: a[None], trace)
+        stats = dict(per_pipe_arrivals=[spec.packets], overflow=0,
+                     pipe_capacity=spec.packets)
+        return traces, stats
+    shards, stats = T.steer_pipes(pkts, spec.pipes, chunk=spec.chunk)
+    traces = jax.tree.map(
+        lambda a: a.reshape((spec.pipes, a.shape[1] // spec.chunk,
+                             spec.chunk) + a.shape[2:]), shards)
+    return traces, stats
+
+
+def grid(base: ScenarioSpec, name_fmt: str, **axes) -> list[ScenarioSpec]:
+    """Expand a cartesian grid of spec fields around ``base``.
+
+    ``axes`` maps field names to value lists; ``name_fmt`` is formatted
+    with each point's axis values (e.g. ``grid(base, "occ_{capacity}",
+    capacity=[256, 512])``).  Axis order follows keyword order, so row
+    ordering in artifacts is stable.
+    """
+    for field in axes:
+        if field not in {f.name for f in dataclasses.fields(ScenarioSpec)}:
+            raise ValueError(f"unknown grid axis {field!r}")
+    specs = []
+    names = list(axes.keys())
+    for values in itertools.product(*axes.values()):
+        kw = dict(zip(names, values))
+        specs.append(dataclasses.replace(
+            base, name=name_fmt.format(**kw), **kw))
+    if len({s.name for s in specs}) != len(specs):
+        raise ValueError(f"name_fmt {name_fmt!r} does not separate the grid")
+    return specs
+
+
+def compile_key(spec: ScenarioSpec, chain: Chain, steps: int):
+    """Trace-compatibility signature (DESIGN.md §8).
+
+    Two scenario points sharing this key run the *same* XLA program on
+    stacked pipe traces: equal ParkConfig (capacity/max_exp/recirc mode and
+    fraction -> equal state shapes and lane width), equal chain constants,
+    equal trace geometry (``steps`` is taken from the point's actual
+    steered traces, so per-pipe capacity rounding is reflected exactly).
+    Points that differ only in workload, seed or flow structure batch
+    together; shape-changing axes (occupancy/capacity, recirc_frac, chunk,
+    window) fall back to the engine's lru_cache-keyed per-point loop.
+    """
+    from repro.switchsim import engine as E
+    cfg = spec.park_config()
+    lane = E.recirc_slots(cfg, spec.chunk)
+    return (cfg, chain, spec.window, spec.chunk, steps, spec.pmax,
+            spec.explicit_drops, lane)

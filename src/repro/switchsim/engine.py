@@ -111,6 +111,11 @@ class PipesResult(EngineResult):
     # feeds repro.hostmodel's per-server PCIe/DMA accounting (DESIGN.md §7)
     per_pipe_telemetry: list[LinkTelemetry] = dataclasses.field(
         default_factory=list)
+    # per-pipe peak parked-slot occupancy; the scenario runner regroups a
+    # flat vmapped pipe axis back into per-scenario results (DESIGN.md §8)
+    # and needs the per-pipe maxima, not only the cross-pipe max
+    per_pipe_peak_occupancy: list[int] = dataclasses.field(
+        default_factory=list)
 
 
 def _alive_bytes(p: PacketBatch) -> jax.Array:
@@ -371,6 +376,9 @@ def run_pipes(
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=1)
     per_tel = _per_pipe_telemetry(ys)
     tel = sum_telemetry(per_tel)
+    occ_pp = np.asarray(ys["occ"], np.int64)  # (P, T+pad)
+    per_occ = [int(v) for v in occ_pp.max(axis=-1)] if occ_pp.size \
+        else [0] * n_pipes
     ctr = np.asarray(state.counters, np.int64)  # (P, C.NUM)
     agg = dict(zip(C.NAMES, (int(v) for v in ctr.sum(axis=0))))
     per_pipe = [dict(zip(C.NAMES, (int(v) for v in ctr[p])))
@@ -384,6 +392,7 @@ def run_pipes(
         per_pipe_srv_bytes=[t.srv_bytes for t in per_tel],
         per_pipe_wire_bytes=[t.wire_bytes for t in per_tel],
         per_pipe_telemetry=per_tel,
+        per_pipe_peak_occupancy=per_occ,
     )
 
 
@@ -408,9 +417,22 @@ def goodput_gain(res: EngineResult) -> dict[str, Any]:
     Positive saving = goodput gain on the switch<->server link (the
     paper's §6.1 metric, byte form).
     """
-    naive = 2 * res.wire_bytes
-    baseline = res.wire_bytes + res.ret_bytes
-    srv = res.srv_bytes
+    return _gain_from_bytes(res.wire_bytes, res.srv_bytes, res.ret_bytes)
+
+
+def goodput_gain_from_telemetry(tel: LinkTelemetry) -> dict[str, Any]:
+    """``goodput_gain`` computed straight from a LinkTelemetry — the
+    per-scenario (or per-pipe/per-server) form used by the scenario runner,
+    which regroups a flat vmapped pipe axis into per-scenario telemetry
+    sums before any EngineResult exists (DESIGN.md §8)."""
+    return _gain_from_bytes(tel.wire_bytes, tel.srv_bytes, tel.merged_bytes)
+
+
+def _gain_from_bytes(wire_bytes: int, srv_bytes: int,
+                     ret_bytes: int) -> dict[str, Any]:
+    naive = 2 * wire_bytes
+    baseline = wire_bytes + ret_bytes
+    srv = srv_bytes
     return dict(
         baseline_link_bytes=baseline,
         baseline_naive_link_bytes=naive,

@@ -1,0 +1,128 @@
+"""Maglev LB inside an NF chain: consistent-hashing table properties,
+backend stability under §6.3.2 flow steering across pipes, and the
+engine ≡ loop bit-exactness oracle for the §7 FW->NAT->LB chain in both
+recirculation modes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.scenarios as S
+from repro.nf.maglev import MaglevLB, build_table
+from repro.traffic.generator import enterprise, steer_pipes
+
+
+class TestMaglevTable:
+    def test_build_is_deterministic(self):
+        """The table must not depend on PYTHONHASHSEED: every pipe (and
+        every CI process, for committed baselines) must build the same
+        consistent-hashing table for the same backend set."""
+        backends = MaglevLB().backends
+        a = build_table(backends, 251)
+        b = build_table(backends, 251)
+        np.testing.assert_array_equal(a, b)
+
+    def test_table_is_balanced(self):
+        """Maglev's round-robin fill guarantees near-perfect balance:
+        every backend owns floor or ceil of table_size / n slots."""
+        backends = MaglevLB().backends
+        table = build_table(backends, 251)
+        counts = np.bincount(table, minlength=len(backends))
+        assert counts.min() >= 251 // len(backends)
+        assert counts.max() - counts.min() <= 1
+
+    def test_backend_removal_disrupts_minimally(self):
+        """Consistent hashing: removing one of n backends must remap the
+        removed backend's slots but leave the vast majority of surviving
+        backends' slots untouched (the Maglev paper's disruption bound)."""
+        backends = MaglevLB().backends
+        full = build_table(backends, 251)
+        smaller = build_table(backends[:-1], 251)
+        removed = len(backends) - 1
+        survived = full != removed
+        moved = (full != smaller) & survived
+        # removed slots must all be reassigned to surviving backends
+        assert np.all(smaller[full == removed] != removed)
+        assert moved.mean() < 0.35, (
+            f"{moved.mean():.2%} of surviving slots remapped")
+
+
+class TestBackendStabilityAcrossPipes:
+    def test_same_flow_same_backend_in_every_pipe(self):
+        """§6.3.2 steering shards flows across per-pipe LB instances; each
+        pipe builds its own table state, so a flow must get the same
+        backend no matter which pipe (or how many pipes) serves it."""
+        pkts = enterprise().make_batch(jax.random.key(11), 256, pmax=256)
+        # src_mac is a random int32 per packet: use it as a row key
+        macs = np.asarray(pkts.src_mac)
+        assert len(np.unique(macs)) == 256, "key collision; pick a new seed"
+        lb = MaglevLB()
+        _, flat_out, _, _ = lb(lb.init_state(), pkts)
+        backend_of = dict(zip(macs.tolist(),
+                              np.asarray(flat_out.dst_ip).tolist()))
+        for n_pipes in (2, 4):
+            shards, _ = steer_pipes(pkts, n_pipes, chunk=32)
+            for p in range(n_pipes):
+                shard = jax.tree.map(lambda a: a[p], shards)
+                _, out, _, _ = lb(lb.init_state(), shard)  # per-pipe state
+                alive = np.asarray(shard.alive)
+                for mac, ip in zip(np.asarray(shard.src_mac)[alive],
+                                   np.asarray(out.dst_ip)[alive]):
+                    assert backend_of[int(mac)] == int(ip)
+
+    def test_rewrite_targets_known_backends_only(self):
+        pkts = enterprise().make_batch(jax.random.key(12), 128, pmax=256)
+        lb = MaglevLB()
+        _, out, drop, _ = lb(lb.init_state(), pkts)
+        assert not bool(jnp.any(drop)), "LB never drops"
+        assert set(np.asarray(out.dst_ip).tolist()) <= set(lb.backends)
+
+
+def _chain_spec(**kw) -> S.ScenarioSpec:
+    kw.setdefault("name", "chainlb")
+    kw.setdefault("workload", ("datacenter",))
+    kw.setdefault("chain", ("fw", "nat", "lb"))
+    kw.setdefault("capacity", 64)
+    kw.setdefault("max_exp", 4)
+    kw.setdefault("packets", 128)
+    kw.setdefault("chunk", 32)
+    kw.setdefault("window", 1)
+    kw.setdefault("pmax", 512)
+    kw.setdefault("flows", 64)
+    kw.setdefault("fw_rules", 8)
+    return S.ScenarioSpec(**kw)
+
+
+class TestChainLBOracle:
+    """Engine ≡ loop (counters + telemetry) for the §7 chain, both modes."""
+
+    @pytest.mark.parametrize("recirc", [False, True])
+    def test_engine_matches_loop_single_pipe(self, recirc):
+        spec = _chain_spec(name=f"recirc_{recirc}", recirc=recirc)
+        res = S.run_matrix([spec])[0]
+        S.verify_oracle(res)  # raises OracleMismatch on any divergence
+        if recirc:
+            assert res.counters["recirculations"] > 0
+        assert res.counters["splits"] > 0
+        # the firewall drops ~fw_rules/flows of the traffic; drops must
+        # show up as a thinner return link
+        t = res.telemetry
+        assert t.from_server_pkts < t.to_server_pkts
+
+    def test_engine_matches_loop_across_pipes(self):
+        spec = _chain_spec(name="pipes2", pipes=2, packets=256)
+        res = S.run_matrix([spec])[0]
+        S.verify_oracle(res)
+
+    def test_sec7_direction_mini(self):
+        """The bench_chain assertion at test scale: positive parking gain
+        on datacenter traffic, strictly higher with recirculation."""
+        off = _chain_spec(name="off")
+        on = dataclasses.replace(off, name="on", recirc=True)
+        res = {r.spec.name: r for r in S.run_matrix([off, on])}
+        g_off = res["off"].gain["goodput_gain"]
+        g_on = res["on"].gain["goodput_gain"]
+        assert g_off > 0
+        assert g_on > g_off

@@ -1,0 +1,300 @@
+"""Scenario matrix subsystem: registry, grid expansion, vmapped-batch
+equivalence with solo engine runs, schema-v2 artifacts, and the
+compare.py benchmark-regression gate (DESIGN.md §8)."""
+import json
+
+import numpy as np
+import pytest
+
+import repro.scenarios as S
+from repro.scenarios.spec import compile_key
+from repro.switchsim import engine as E
+
+from benchmarks import compare
+from benchmarks.artifacts import (SCHEMA_VERSION, BenchArtifactError,
+                                  load_bench_json, write_bench_json)
+from benchmarks.figures import sec7_chain_table
+
+
+def _mini(**kw) -> S.ScenarioSpec:
+    kw.setdefault("name", "mini")
+    kw.setdefault("workload", ("fixed", 512))
+    kw.setdefault("chain", ("macswap",))
+    kw.setdefault("capacity", 64)
+    kw.setdefault("packets", 128)
+    kw.setdefault("chunk", 32)
+    kw.setdefault("window", 1)
+    kw.setdefault("pmax", 512)
+    return S.ScenarioSpec(**kw)
+
+
+class TestSpec:
+    def test_registry_has_the_paper_matrix(self):
+        assert {"pipeline", "recirc", "hostmodel_sizes",
+                "hostmodel_servers", "chain"} <= set(S.names())
+
+    @pytest.mark.parametrize("fam", S.names())
+    @pytest.mark.parametrize("tiny", [True, False])
+    def test_families_expand_with_unique_names(self, fam, tiny):
+        specs = S.family(fam, tiny=tiny)
+        assert specs
+        assert len({s.name for s in specs}) == len(specs)
+
+    def test_unknown_family_raises_with_known_names(self):
+        with pytest.raises(KeyError, match="registered"):
+            S.family("nope")
+
+    def test_grid_expansion(self):
+        specs = S.grid(_mini(), "c{capacity}_p{pipes}",
+                       capacity=[32, 64], pipes=[1, 2])
+        assert [s.name for s in specs] == [
+            "c32_p1", "c32_p2", "c64_p1", "c64_p2"]
+        assert specs[1].capacity == 32 and specs[1].pipes == 2
+
+    def test_grid_rejects_unknown_axis_and_colliding_names(self):
+        with pytest.raises(ValueError, match="unknown grid axis"):
+            S.grid(_mini(), "x{bogus}", bogus=[1])
+        with pytest.raises(ValueError, match="does not separate"):
+            S.grid(_mini(), "same", capacity=[32, 64])
+
+    def test_spec_validates_eagerly(self):
+        with pytest.raises(ValueError, match="multiple"):
+            _mini(packets=100, chunk=32)
+        with pytest.raises(ValueError, match="unknown workload"):
+            _mini(workload=("bogus",))
+        with pytest.raises(ValueError, match="unknown NF"):
+            _mini(chain=("fw", "bogus"))
+
+    def test_make_packets_deterministic_and_flow_constrained(self):
+        spec = _mini(flows=16)
+        a, b = S.make_packets(spec), S.make_packets(spec)
+        np.testing.assert_array_equal(np.asarray(a.payload),
+                                      np.asarray(b.payload))
+        np.testing.assert_array_equal(np.asarray(a.src_ip),
+                                      np.asarray(b.src_ip))
+        assert len(np.unique(np.asarray(a.src_ip))) <= 16
+
+    def test_workload_identity_independent_of_shape_axes(self):
+        """Recirc on/off pairs must compare the same offered packets."""
+        a = S.make_packets(_mini())
+        b = S.make_packets(_mini(recirc=True, capacity=32))
+        np.testing.assert_array_equal(np.asarray(a.payload),
+                                      np.asarray(b.payload))
+
+    def test_datacenter_workload_distinct_from_enterprise(self):
+        dc = S.resolve_workload(("datacenter",))
+        ent = S.resolve_workload(("enterprise",))
+        assert dc.name == "datacenter"
+        # DC-side mix: smaller mean, bigger not-splittable small-packet mass
+        assert dc.mean_pkt_bytes < ent.mean_pkt_bytes
+        assert not np.array_equal(dc.sizes, ent.sizes) or \
+            not np.array_equal(dc.probs, ent.probs)
+
+
+class TestRunner:
+    def test_batched_points_equal_solo_engine_runs(self):
+        """Points sharing a compile key run as ONE vmapped program and must
+        be bit-identical to their solo run_engine results."""
+        specs = [_mini(name="w512", workload=("fixed", 512)),
+                 _mini(name="w256", workload=("fixed", 256)),
+                 _mini(name="ent", workload=("enterprise",), seed=3)]
+        results = S.run_matrix(specs)
+        assert all(r.group_size == 3 for r in results)
+        for spec, res in zip(specs, results):
+            pkts = S.make_packets(spec)
+            chain = S.build_chain(spec, pkts)
+            from repro.core.packet import to_time_major
+            solo = E.run_engine(spec.park_config(), chain,
+                                to_time_major(pkts, spec.chunk),
+                                window=spec.window)
+            assert res.counters == solo.counters
+            assert res.telemetry == solo.telemetry
+            assert res.peak_occupancy == solo.peak_occupancy
+            assert res.gain == E.goodput_gain(solo)
+
+    def test_shape_axes_split_compile_groups(self):
+        specs = [_mini(name="c64"), _mini(name="c32", capacity=32)]
+        results = S.run_matrix(specs)
+        assert [r.group_size for r in results] == [1, 1]
+        pkts = S.make_packets(specs[0])
+        chain = S.build_chain(specs[0], pkts)
+        k0 = compile_key(specs[0], chain, 4)
+        k1 = compile_key(specs[1], chain, 4)
+        assert k0 != k1
+
+    def test_multi_pipe_points_batch_on_flat_pipe_axis(self):
+        """Two 2-pipe points share one compile; per-scenario regrouping
+        must match the per-spec run_pipes results exactly."""
+        specs = [_mini(name="a", pipes=2, packets=256, seed=0),
+                 _mini(name="b", pipes=2, packets=256, seed=7)]
+        results = S.run_matrix(specs)
+        assert all(r.group_size == 2 for r in results)
+        for spec, res in zip(specs, results):
+            pkts = S.make_packets(spec)
+            chain = S.build_chain(spec, pkts)
+            traces, _ = S.steer(spec, pkts)
+            solo = E.run_pipes(spec.park_config(), chain, traces,
+                               window=spec.window)
+            assert res.counters == solo.counters
+            assert res.telemetry == solo.telemetry
+            assert res.per_pipe_telemetry == solo.per_pipe_telemetry
+            assert res.per_pipe_peak_occupancy == \
+                solo.per_pipe_peak_occupancy
+
+    def test_verify_oracle_passes_on_honest_results(self):
+        res = S.run_matrix([_mini(name="v")])
+        S.verify_oracle(res[0])
+
+    def test_verify_oracle_rejects_tampered_results(self):
+        res = S.run_matrix([_mini(name="t")])[0]
+        bad = dict(res.per_pipe_counters[0])
+        bad["splits"] += 1
+        res.per_pipe_counters[0] = bad
+        with pytest.raises(S.OracleMismatch, match="counters"):
+            S.verify_oracle(res)
+
+
+class TestArtifactsV2:
+    def _payload(self, tmp_path, rows, bench="chain"):
+        path = tmp_path / f"BENCH_{bench}.json"
+        write_bench_json(str(path), bench, rows,
+                         matrix={"s": _mini().as_dict()})
+        return str(path)
+
+    def test_schema_v2_roundtrip_with_scenario_rows(self, tmp_path):
+        res = S.run_matrix([_mini(name="r")])[0]
+        rows = S.default_rows(res, "fam")
+        path = self._payload(tmp_path, rows, bench="fam")
+        payload = load_bench_json(path)
+        assert payload["schema"] == SCHEMA_VERSION == 2
+        assert payload["rows"][0]["scenario"] == "r"
+        assert payload["matrix"]["s"]["chain"] == ["macswap"]
+
+    def test_v1_artifacts_are_rejected(self, tmp_path):
+        path = tmp_path / "BENCH_old.json"
+        path.write_text(json.dumps(
+            {"schema": 1, "bench": "old", "rows": [], "summary": {}}))
+        with pytest.raises(BenchArtifactError, match="schema"):
+            load_bench_json(str(path))
+
+    def test_duplicate_row_names_are_rejected(self, tmp_path):
+        path = tmp_path / "BENCH_dup.json"
+        path.write_text(json.dumps(
+            {"schema": 2, "bench": "d",
+             "rows": [{"name": "x", "value": 1},
+                      {"name": "x", "value": 2}]}))
+        with pytest.raises(BenchArtifactError, match="duplicate"):
+            load_bench_json(str(path))
+
+
+class TestCompareGate:
+    ROWS = [("f/a/goodput_gain", 0.20, "d", None),
+            ("f/a/wire_bytes", 1000, "d", None),
+            ("f/a/pps", 123456, "timing", None),
+            ("f/a/oracle_identical", 1, "d", None)]
+
+    def _write(self, tmp_path, name, rows, bench="f", schema=None):
+        path = tmp_path / name
+        payload = write_bench_json(str(path), bench, rows)
+        if schema is not None:
+            payload["schema"] = schema
+            path.write_text(json.dumps(payload))
+        return str(path)
+
+    def test_identical_artifacts_pass(self, tmp_path):
+        base = self._write(tmp_path, "base.json", self.ROWS)
+        cand = self._write(tmp_path, "cand.json", self.ROWS)
+        assert compare.compare_files(base, cand) == []
+
+    def test_injected_regression_fails(self, tmp_path):
+        base_dir = tmp_path / "baselines"
+        base_dir.mkdir()
+        base = self._write(base_dir, "BENCH_f.json", self.ROWS)
+        bad = [("f/a/goodput_gain", 0.10, "d", None)] + self.ROWS[1:]
+        cand = self._write(tmp_path, "BENCH_f.json", bad)
+        problems = compare.compare_files(base, cand)
+        assert len(problems) == 1 and "goodput_gain" in problems[0]
+        assert compare.main([cand, "--baselines", str(base_dir)]) == 1
+
+    def test_timing_rows_are_not_gated(self, tmp_path):
+        base = self._write(tmp_path, "base.json", self.ROWS)
+        fast = self.ROWS[:2] + [("f/a/pps", 999, "t", None), self.ROWS[3]]
+        cand = self._write(tmp_path, "cand.json", fast)
+        assert compare.compare_files(base, cand) == []
+
+    def test_exactness_rows_gate_bit_for_bit(self, tmp_path):
+        base = self._write(tmp_path, "base.json", self.ROWS)
+        bad = self.ROWS[:3] + [("f/a/oracle_identical", 0, "d", None)]
+        cand = self._write(tmp_path, "cand.json", bad)
+        assert any("oracle_identical" in p
+                   for p in compare.compare_files(base, cand))
+
+    def test_missing_row_fails_and_new_row_warns(self, tmp_path):
+        base = self._write(tmp_path, "base.json", self.ROWS)
+        cand = self._write(tmp_path, "cand.json",
+                           self.ROWS[1:] + [("f/a/extra", 1, "d", None)])
+        problems = compare.compare_files(base, cand)
+        assert any(p.startswith("MISSING") for p in problems)
+        assert any(p.startswith("NEW") for p in problems)
+        # NEW rows alone must not fail the gate
+        cand2 = self._write(tmp_path, "cand2.json",
+                            self.ROWS + [("f/a/extra", 1, "d", None)])
+        probs2 = compare.compare_files(base, cand2)
+        assert all(p.startswith("NEW") for p in probs2)
+
+    def test_schema_mismatch_exits_2(self, tmp_path):
+        base = self._write(tmp_path, "BENCH_f.json", self.ROWS)
+        bad_dir = tmp_path / "cand"
+        bad_dir.mkdir()
+        cand = self._write(bad_dir, "BENCH_f.json", self.ROWS, schema=1)
+        assert compare.main([cand, "--baselines", str(tmp_path)]) == 2
+
+    def test_bench_name_mismatch(self, tmp_path):
+        base = self._write(tmp_path, "base.json", self.ROWS, bench="f")
+        cand = self._write(tmp_path, "cand.json", self.ROWS, bench="g")
+        assert any("bench name" in p
+                   for p in compare.compare_files(base, cand))
+
+    def test_tolerance_rules_have_a_catch_all(self):
+        rtol, atol = compare.tolerance_for("completely/unknown/metric")
+        assert rtol is not None
+
+    def test_committed_baselines_are_valid_schema_v2(self):
+        import glob
+        import os
+        here = os.path.join(os.path.dirname(compare.__file__), "baselines")
+        paths = glob.glob(os.path.join(here, "BENCH_*.json"))
+        assert len(paths) >= 4  # pipeline, recirc, hostmodel, chain
+        for p in paths:
+            load_bench_json(p)
+
+
+class TestFiguresConsume:
+    def _chain_rows(self):
+        rows = []
+        for wl in ("datacenter", "enterprise"):
+            rows.append((f"chain/{wl}_base/goodput_gain", 0.13, "d", None))
+            rows.append((f"chain/{wl}_recirc/goodput_gain", 0.22, "d", None))
+        return rows
+
+    def test_sec7_table_renders_from_artifact(self, tmp_path):
+        path = tmp_path / "BENCH_chain.json"
+        write_bench_json(str(path), "chain", self._chain_rows())
+        lines = sec7_chain_table(load_bench_json(str(path)))
+        assert any("datacenter" in ln for ln in lines)
+        assert any("13.00%" in ln for ln in lines)
+
+    def test_missing_referenced_scenario_row_is_fatal(self, tmp_path):
+        rows = self._chain_rows()[1:]  # drop the datacenter base-gain row
+        path = tmp_path / "BENCH_chain.json"
+        write_bench_json(str(path), "chain", rows)
+        with pytest.raises(BenchArtifactError, match="missing referenced"):
+            sec7_chain_table(load_bench_json(str(path)))
+
+    def test_figures_main_exits_nonzero_without_chain(self, tmp_path):
+        from benchmarks.figures import main as figures_main
+        path = tmp_path / "BENCH_f.json"
+        write_bench_json(str(path), "f", [("f/x", 1, "d", None)])
+        with pytest.raises(SystemExit) as e:
+            figures_main([str(path), "--require-chain"])
+        assert e.value.code == 2
