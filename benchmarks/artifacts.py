@@ -13,6 +13,12 @@ Schema (version 2):
     {
       "schema": 2,
       "bench": "<benchmark name>",
+      "backend": str,                 # optional: the dataplane backend the
+                                      #   whole run used (repro.backend name,
+                                      #   e.g. "ref" / "pallas_interpret");
+                                      #   omitted for multi-backend sweeps
+                                      #   (the per-scenario matrix block then
+                                      #   carries it per point)
       "rows": [{"name": str,          # unique metric path, e.g.
                                       #   "chain/datacenter_base/goodput_gain"
                 "value": int|float|str,
@@ -28,8 +34,11 @@ Schema (version 2):
 
 v1 -> v2: rows gained the optional ``scenario`` field and the top level
 gained the optional ``matrix`` block, both written by benches that run
-through ``repro.scenarios`` (the vmapped sweep runner).  ``load_bench_json``
-accepts only the current version; regenerate baselines when bumping.
+through ``repro.scenarios`` (the vmapped sweep runner); the optional
+top-level ``backend`` provenance field was added with the dataplane-backend
+layer (compare.py keys its per-backend baseline matching on it).
+``load_bench_json`` accepts only the current version; regenerate baselines
+when bumping.
 """
 from __future__ import annotations
 
@@ -57,12 +66,15 @@ def rows_to_json(rows) -> list[dict]:
 
 
 def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
-                     matrix: dict | None = None) -> dict:
+                     matrix: dict | None = None,
+                     backend: str | None = None) -> dict:
     """Write one benchmark artifact; returns the payload written.
 
     ``matrix`` maps scenario names to their declarative spec dicts
     (``ScenarioSpec.as_dict()``) for provenance; omitted when the bench
-    does not run through the scenario subsystem.
+    does not run through the scenario subsystem.  ``backend`` records the
+    dataplane backend a single-backend run used (omit it for multi-backend
+    sweeps — each scenario's matrix entry carries its own).
     """
     payload = {
         "schema": SCHEMA_VERSION,
@@ -72,6 +84,8 @@ def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
     }
     if matrix:
         payload["matrix"] = matrix
+    if backend is not None:
+        payload["backend"] = backend
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -95,6 +109,10 @@ def load_bench_json(path: str) -> dict:
             f"{path}: schema {payload.get('schema')!r} != {SCHEMA_VERSION}")
     if not isinstance(payload.get("bench"), str) or not payload["bench"]:
         raise BenchArtifactError(f"{path}: 'bench' must be a non-empty string")
+    if "backend" in payload and (
+            not isinstance(payload["backend"], str) or not payload["backend"]):
+        raise BenchArtifactError(
+            f"{path}: 'backend' must be a non-empty string when present")
     rows = payload.get("rows")
     if not isinstance(rows, list):
         raise BenchArtifactError(f"{path}: 'rows' must be a list")

@@ -34,9 +34,20 @@ sweep comparing goodput gain with the recirculation lane off vs on
 (retry + 352B rows under a recirculation-port budget), asserting the gain
 is strictly higher at high occupancy — the Fig. 13 direction (13% -> 28%).
 
+``--backend`` makes the dataplane backend (repro.backend, DESIGN.md §9) a
+sweep axis: one value runs the whole sweep on that backend (rows keep their
+historical names, the artifact records the backend as provenance); several
+values record ref-vs-Pallas throughput side by side (``pipes2`` next to
+``pipes2_pallas_interpret``).  ``--oracle`` additionally verify_oracle's
+every point — engine≡loop counters+telemetry on that point's backend.
+
     PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 1 2 4 8
     PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 2 --tiny
     PYTHONPATH=src python benchmarks/bench_pipeline.py --recirc
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 1 2 \
+        --backend ref pallas_interpret
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 2 --tiny \
+        --backend pallas_interpret --oracle
 
 Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
 """
@@ -75,16 +86,19 @@ def _time(fn, repeats: int) -> float:
 
 
 def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
-          verify: bool = True, explicit_drops: bool = False):
+          verify: bool = True, explicit_drops: bool = False,
+          backends=("ref",), oracle: bool = False):
     specs = S.pipeline_grid(pipes_list, packets=n_pkts, chunk=chunk,
                             window=window, pmax=pmax, capacity=capacity,
-                            explicit_drops=explicit_drops)
+                            explicit_drops=explicit_drops, backends=backends)
     results = S.run_matrix(specs, time_runs=True, time_repeats=repeats)
     model = P.ServerModel()
     rows = []
     matrix = {s.name: s.as_dict() for s in specs}
 
     for spec, res in zip(specs, results):
+        if oracle:
+            S.verify_oracle(res)  # engine≡loop on this point's backend
         n_pipes = spec.pipes
         dt = res.wall_s
         pps = n_pkts / dt if dt else 0.0
@@ -103,13 +117,14 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
             P.peak_goodput(model, base_d, res.nf_cycles), n_pipes)
         model_gain = op_park.goodput_gbps / op_base.goodput_gbps - 1.0
         rows.append((
-            f"pipeline/pipes{n_pipes}/pps", round(pps),
+            f"pipeline/{spec.name}/pps", round(pps),
             f"wall_s={dt:.4f};splits={res.counters['splits']};"
             f"merges={res.counters['merges']};"
             f"premature={res.counters['premature_evictions']};"
-            f"overflow={res.steer_stats['overflow']}", spec.name))
+            f"overflow={res.steer_stats['overflow']};"
+            f"backend={spec.backend}", spec.name))
         rows.append((
-            f"pipeline/pipes{n_pipes}/goodput_gain",
+            f"pipeline/{spec.name}/goodput_gain",
             round(gain["goodput_gain"], 4),
             f"link_byte_saving={gain['link_byte_saving']:.4f};"
             f"gain_naive={gain['goodput_gain_naive']:.4f};"
@@ -121,39 +136,54 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
             spec.name))
 
     if verify and 1 in pipes_list:
-        spec1 = specs[list(pipes_list).index(1)]
-        pkts = S.make_packets(spec1)
-        chain = S.build_chain(spec1, pkts)
-        cfg = spec1.park_config()
-        trace = to_time_major(pkts, chunk)
-        eng = E.run_engine(cfg, chain, trace, window=window,
-                           explicit_drops=explicit_drops, collect_sent=True)
+        for spec1 in [s for s in specs if s.pipes == 1]:
+            pkts = S.make_packets(spec1)
+            chain = S.build_chain(spec1, pkts)
+            cfg = spec1.park_config()
+            bk = spec1.backend_config()
+            trace = to_time_major(pkts, chunk)
+            eng = E.run_engine(cfg, chain, trace, window=window,
+                               explicit_drops=explicit_drops, backend=bk,
+                               collect_sent=True)
 
-        def run_loop():
-            return simulate_loop(cfg, chain, pkts, window=window, chunk=chunk,
-                                 explicit_drops=explicit_drops)
+            def run_loop(cfg=cfg, chain=chain, pkts=pkts, bk=bk):
+                return simulate_loop(cfg, chain, pkts, window=window,
+                                     chunk=chunk,
+                                     explicit_drops=explicit_drops,
+                                     backend=bk)
 
-        loop_res = run_loop()
-        dt_loop = _time(run_loop, max(1, repeats // 2))
-        dt_eng = _time(
-            lambda: jax.block_until_ready(
-                E.run_engine(cfg, chain, trace, window=window,
-                             explicit_drops=explicit_drops).merged.payload),
-            repeats)
-        got, gl = wire_bytes(
-            jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
-                         eng.merged))
-        want, wl_ = wire_bytes(_cat(loop_res.merged))
-        identical = (np.array_equal(np.asarray(got), np.asarray(want))
-                     and np.array_equal(np.asarray(gl), np.asarray(wl_))
-                     and eng.counters == loop_res.counters
-                     and eng.telemetry == loop_res.telemetry)
-        rows.append((
-            "pipeline/engine_vs_seed_loop/identical", int(identical),
-            f"speedup={dt_loop / dt_eng:.2f}x;"
-            f"loop_s={dt_loop:.4f};engine_s={dt_eng:.4f}", None))
-        if not identical:
-            raise SystemExit("engine output diverged from seed loop")
+            loop_res = run_loop()
+            dt_loop = _time(run_loop, max(1, repeats // 2))
+            dt_eng = _time(
+                lambda cfg=cfg, chain=chain, trace=trace, bk=bk:
+                jax.block_until_ready(
+                    E.run_engine(cfg, chain, trace, window=window,
+                                 explicit_drops=explicit_drops,
+                                 backend=bk).merged.payload),
+                repeats)
+            got, gl = wire_bytes(
+                jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                             eng.merged))
+            want, wl_ = wire_bytes(_cat(loop_res.merged))
+            identical = (np.array_equal(np.asarray(got), np.asarray(want))
+                         and np.array_equal(np.asarray(gl), np.asarray(wl_))
+                         and eng.counters == loop_res.counters
+                         and eng.telemetry == loop_res.telemetry)
+            # legacy row name for a single-backend sweep so committed
+            # baselines keep gating it; per-backend names when swept
+            vname = ("pipeline/engine_vs_seed_loop/identical"
+                     if len(backends) == 1 else
+                     f"pipeline/engine_vs_seed_loop_{spec1.backend}"
+                     f"/identical")
+            rows.append((
+                vname, int(identical),
+                f"speedup={dt_loop / dt_eng:.2f}x;"
+                f"loop_s={dt_loop:.4f};engine_s={dt_eng:.4f};"
+                f"backend={spec1.backend}", spec1.name))
+            if not identical:
+                raise SystemExit(
+                    f"engine output diverged from seed loop "
+                    f"(backend={spec1.backend})")
     return rows, matrix
 
 
@@ -220,6 +250,14 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=4096)
     ap.add_argument("--pmax", type=int, default=2048)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--backend", nargs="+", default=["ref"],
+                    choices=["ref", "pallas", "pallas_interpret", "auto"],
+                    help="dataplane backend(s) to sweep (repro.backend); "
+                         "more than one records them side by side in the "
+                         "artifact rows")
+    ap.add_argument("--oracle", action="store_true",
+                    help="verify_oracle every sweep point (engine≡loop "
+                         "counters+telemetry on that point's backend)")
     ap.add_argument("--recirc", action="store_true",
                     help="run the recirculation occupancy sweep "
                          "(paper §6.2.5) instead of the pipes sweep")
@@ -244,6 +282,8 @@ def main() -> None:
             ("--repeats", args.repeats, 3),
             ("--no-verify", args.no_verify, False),
             ("--explicit-drops", args.explicit_drops, False),
+            ("--backend", tuple(args.backend), ("ref",)),
+            ("--oracle", args.oracle, False),
         ) if val != default]
         if ignored:
             ap.error(f"--recirc does not take {', '.join(ignored)} "
@@ -262,14 +302,22 @@ def main() -> None:
         rows, matrix = bench(args.pipes, args.packets, args.chunk,
                              args.window, args.capacity, args.pmax,
                              args.repeats, verify=not args.no_verify,
-                             explicit_drops=args.explicit_drops)
+                             explicit_drops=args.explicit_drops,
+                             backends=args.backend, oracle=args.oracle)
     print("name,value,derived")
     for row in rows:
         name, value, derived = row[0], row[1], row[2]
         print(f"{name},{value},{str(derived).replace(',', ';')}")
     if args.json:
+        # single-backend runs record their backend as artifact provenance
+        # (compare.py uses it to match baselines per backend); resolved to
+        # what actually ran, so "auto" can never mask a platform difference
+        backend = None
+        if not args.recirc and len(args.backend) == 1:
+            from repro.backend import as_config
+            backend = as_config(args.backend[0]).concrete().default
         write_bench_json(args.json, "recirc" if args.recirc else "pipeline",
-                         rows, matrix=matrix)
+                         rows, matrix=matrix, backend=backend)
 
 
 if __name__ == "__main__":

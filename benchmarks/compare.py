@@ -21,6 +21,16 @@ The simulation is deterministic (fixed PRNG keys, deterministic Maglev
 table), so in practice equal code produces equal artifacts; the bands
 absorb cross-version JAX drift without letting a real regression through.
 
+Baselines are matched per backend: a candidate is first matched to a
+baseline by basename (so a committed ``BENCH_pipeline_pallas_interpret``
+baseline wins if one exists); failing that, a candidate that records a
+``backend`` provenance field falls back to its bench's backend-agnostic
+baseline (``BENCH_<bench>.json``).  The backends are bit-exact by
+construction (tests/test_backend.py), so the ONE committed ref baseline
+gates every backend's numeric rows — a Pallas run that drifts from the ref
+numbers fails CI exactly like a ref regression (timing rows stay exempt).
+When both artifacts record a ``backend``, it must match.
+
     python benchmarks/compare.py BENCH_pipeline.json BENCH_chain.json
     python benchmarks/compare.py --baselines benchmarks/baselines BENCH_*.json
 
@@ -91,13 +101,44 @@ def compare_rows(baseline: dict, candidate: dict) -> list[str]:
     return problems
 
 
-def compare_files(baseline_path: str, candidate_path: str) -> list[str]:
+def compare_files(baseline_path: str, candidate_path: str,
+                  candidate_payload: dict | None = None) -> list[str]:
+    """``candidate_payload`` lets callers that already loaded the
+    candidate (main's baseline resolution) skip a second parse."""
     baseline = load_bench_json(baseline_path)
-    candidate = load_bench_json(candidate_path)
+    candidate = (candidate_payload if candidate_payload is not None
+                 else load_bench_json(candidate_path))
     if baseline["bench"] != candidate["bench"]:
         return [f"MISMATCH bench name: baseline={baseline['bench']!r} "
                 f"candidate={candidate['bench']!r}"]
+    # Backend provenance must agree when both sides were produced for the
+    # same artifact name; a basename MISS fell back to the backend-agnostic
+    # baseline on purpose (cross-backend numeric gating), so differing
+    # backends are exactly the point there.
+    same_name = (os.path.basename(baseline_path)
+                 == os.path.basename(candidate_path))
+    if (same_name and "backend" in baseline and "backend" in candidate
+            and baseline["backend"] != candidate["backend"]):
+        return [f"MISMATCH backend: baseline={baseline['backend']!r} "
+                f"candidate={candidate['backend']!r}"]
     return compare_rows(baseline, candidate)
+
+
+def resolve_baseline(baselines_dir: str, candidate_path: str,
+                     candidate_payload: dict | None = None) -> str:
+    """Per-backend baseline resolution (see module docstring): exact
+    basename first, then — for candidates recording a ``backend`` — the
+    bench's backend-agnostic ``BENCH_<bench>.json``."""
+    base = os.path.join(baselines_dir, os.path.basename(candidate_path))
+    if os.path.exists(base):
+        return base
+    payload = (candidate_payload if candidate_payload is not None
+               else load_bench_json(candidate_path))
+    if payload.get("backend"):
+        alt = os.path.join(baselines_dir, f"BENCH_{payload['bench']}.json")
+        if os.path.exists(alt):
+            return alt
+    return base  # missing: load_bench_json reports it with the right name
 
 
 def main(argv=None) -> int:
@@ -112,9 +153,10 @@ def main(argv=None) -> int:
 
     failed = False
     for cand in args.candidates:
-        base = os.path.join(args.baselines, os.path.basename(cand))
         try:
-            problems = compare_files(base, cand)
+            payload = load_bench_json(cand)
+            base = resolve_baseline(args.baselines, cand, payload)
+            problems = compare_files(base, cand, payload)
         except BenchArtifactError as e:
             print(f"compare: {e}", file=sys.stderr)
             return 2

@@ -1,0 +1,17 @@
+"""Unified dataplane-backend layer (DESIGN.md §9).
+
+One registry of per-packet hot-path primitives (``crc16_tag``,
+``acl_match``, ``maglev_select``, ``payload_store``, ``payload_fetch``),
+each with exactly one jnp reference implementation (``ref``) and one
+Pallas implementation (``repro.kernels``), selected by a frozen
+``BackendConfig`` threaded through ``core.park``, the NF chain, the
+simulation engine and the scenario matrix.
+"""
+from repro.backend.config import (BACKENDS, PRIMITIVES, BackendConfig,
+                                  as_config, auto_backend, coerce_backend)
+from repro.backend.registry import Primitive, dispatch, primitive
+
+__all__ = [
+    "BACKENDS", "PRIMITIVES", "BackendConfig", "as_config", "auto_backend",
+    "coerce_backend", "Primitive", "dispatch", "primitive",
+]

@@ -1,0 +1,122 @@
+"""Frozen backend selection for the dataplane-primitive registry.
+
+A ``BackendConfig`` names which implementation of each hot-path primitive
+(DESIGN.md §9) the dataplane runs:
+
+  * ``"ref"``              — the single jnp reference implementation
+                             (``repro.backend.ref``);
+  * ``"pallas"``           — the Pallas TPU kernel, compiled;
+  * ``"pallas_interpret"`` — the same kernel body under ``interpret=True``
+                             (bit-exact validation path, runs on CPU);
+  * ``"auto"``             — resolve per platform: Pallas on TPU, ref
+                             everywhere else.
+
+It is a frozen, hashable value by design: it rides in ``jax.jit`` static
+arguments (``core.park.split``/``merge``/``recirc``), in the engine's
+``lru_cache`` compile key (``switchsim.engine._compiled``) and in the
+scenario runner's ``compile_key`` — two runs with equal configs share a
+compiled program.  ``overrides`` selects a different backend for individual
+primitives (e.g. Pallas payload movement with ref CRC).
+
+``coerce_backend`` is additionally the one deprecation funnel for the
+retired ``use_kernel: bool`` flag (True historically meant "run the Pallas
+kernels in interpret mode", so it maps to ``"pallas_interpret"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+# The registry (repro.backend.registry) asserts it implements exactly this
+# set; the names live here so BackendConfig can validate overrides without
+# importing the kernel layer.
+PRIMITIVES = ("crc16_tag", "acl_match", "maglev_select", "payload_store",
+              "payload_fetch")
+
+BACKENDS = ("ref", "pallas", "pallas_interpret", "auto")
+
+
+def auto_backend() -> str:
+    """What ``"auto"`` resolves to on this process's default device."""
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Backend selection: one default plus per-primitive overrides.
+
+    ``overrides`` is stored as a sorted tuple of ``(primitive, backend)``
+    pairs (a dict is accepted and normalized) so equal selections hash
+    equally regardless of construction order.
+    """
+
+    default: str = "auto"
+    overrides: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.overrides, dict):
+            object.__setattr__(self, "overrides",
+                               tuple(sorted(self.overrides.items())))
+        if self.default not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.default!r} (have {BACKENDS})")
+        for prim, mode in self.overrides:
+            if prim not in PRIMITIVES:
+                raise ValueError(
+                    f"override for unknown primitive {prim!r} "
+                    f"(have {PRIMITIVES})")
+            if mode not in BACKENDS:
+                raise ValueError(
+                    f"unknown backend {mode!r} for {prim!r} "
+                    f"(have {BACKENDS})")
+
+    def resolve(self, primitive: str) -> str:
+        """Concrete backend ("ref" | "pallas" | "pallas_interpret") for one
+        primitive, with ``"auto"`` resolved against the runtime platform."""
+        if primitive not in PRIMITIVES:
+            raise KeyError(
+                f"unknown primitive {primitive!r} (have {PRIMITIVES})")
+        mode = dict(self.overrides).get(primitive, self.default)
+        return auto_backend() if mode == "auto" else mode
+
+    def concrete(self) -> "BackendConfig":
+        """Canonical platform-resolved form: no ``"auto"`` left, redundant
+        overrides dropped.  Used as the compile-cache key so ``"auto"`` and
+        its resolution share one compiled program."""
+        default = (auto_backend() if self.default == "auto" else self.default)
+        overrides = tuple(sorted(
+            (p, m) for p, m in ((p, self.resolve(p)) for p in PRIMITIVES)
+            if m != default))
+        return BackendConfig(default, overrides)
+
+
+def as_config(backend: "BackendConfig | str | None") -> BackendConfig:
+    """Accept the three spellings every dataplane entry point takes:
+    None (= auto), a backend name, or a full BackendConfig."""
+    if backend is None:
+        return BackendConfig()
+    if isinstance(backend, BackendConfig):
+        return backend
+    if isinstance(backend, str):
+        return BackendConfig(default=backend)
+    raise TypeError(
+        f"backend must be a BackendConfig, a backend name or None; "
+        f"got {type(backend).__name__}")
+
+
+def coerce_backend(backend: "BackendConfig | str | None" = None,
+                   use_kernel: bool | None = None) -> BackendConfig:
+    """Resolve the (backend, deprecated use_kernel) pair every dataplane
+    entry point accepts into one concrete BackendConfig."""
+    if use_kernel is not None:
+        warnings.warn(
+            "use_kernel= is deprecated; pass backend='pallas_interpret' "
+            "(or 'ref' / 'pallas' / a BackendConfig) instead",
+            DeprecationWarning, stacklevel=3)
+        if backend is not None:
+            raise ValueError(
+                "pass either backend= or the deprecated use_kernel=, "
+                "not both")
+        backend = "pallas_interpret" if use_kernel else "ref"
+    return as_config(backend).concrete()

@@ -1,0 +1,119 @@
+"""The single jnp reference implementation of every dataplane primitive.
+
+One function per registry primitive (DESIGN.md §9) — THE reference
+semantics of the repo's per-packet hot path.  ``core/header``,
+``nf/firewall``, ``nf/maglev`` and ``core/park`` all delegate here through
+``repro.backend.registry.dispatch``; each Pallas kernel under
+``repro.kernels`` must match its primitive bit-exactly (asserted by
+``tests/test_backend.py`` and ``tests/test_kernels.py``).  No other module
+may duplicate this math.
+
+Everything here is shape-polymorphic over a leading batch axis and written
+branch-free (P4-style predication, paper §2) so it composes inside
+``lax.scan``/``vmap`` exactly like the kernels do.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# crc16_tag — PayloadPark header tag CRC (paper §3.2, Fig. 2)
+# ---------------------------------------------------------------------------
+
+CRC_POLY = 0x1021
+CRC_INIT = 0xFFFF
+
+
+def crc16_bytes(data: jax.Array) -> jax.Array:
+    """CRC-16/CCITT-FALSE over the trailing axis of a uint8/int32 byte array.
+
+    ``data``: (..., N) byte values in [0, 255].  Returns (...,) int32 CRC.
+    Bitwise, branch-free formulation (P4 actions are short VLIW programs —
+    the same constraint shapes the Pallas kernel).
+    """
+    data = data.astype(jnp.int32)
+    n = data.shape[-1]
+    crc = jnp.full(data.shape[:-1], CRC_INIT, jnp.int32)
+
+    def per_byte(i, crc):
+        crc = crc ^ (data[..., i] << 8)
+
+        def per_bit(_, c):
+            hi = (c >> 15) & 1
+            c = (c << 1) & 0xFFFF
+            return jnp.where(hi == 1, c ^ CRC_POLY, c)
+
+        return jax.lax.fori_loop(0, 8, per_bit, crc)
+
+    return jax.lax.fori_loop(0, n, per_byte, crc)
+
+
+def tag_bytes(ti: jax.Array, clk: jax.Array) -> jax.Array:
+    """Pack (ti, clk) into 4 little-endian bytes: (..., 4) int32."""
+    ti = ti.astype(jnp.int32)
+    clk = clk.astype(jnp.int32)
+    return jnp.stack(
+        [ti & 0xFF, (ti >> 8) & 0xFF, clk & 0xFF, (clk >> 8) & 0xFF], axis=-1
+    )
+
+
+def crc16_tag(ti: jax.Array, clk: jax.Array) -> jax.Array:
+    """CRC over the PayloadPark tag; mirrored by repro.kernels.crc16."""
+    return crc16_bytes(tag_bytes(ti, clk))
+
+
+# ---------------------------------------------------------------------------
+# acl_match — firewall blocked-IP linear probe (paper §6.1)
+# ---------------------------------------------------------------------------
+
+def acl_match(src_ip: jax.Array, rules: jax.Array) -> jax.Array:
+    """src_ip: (B,) int32; rules: (R,) int32 -> (B,) bool blocked."""
+    return jnp.any(src_ip[:, None] == rules[None, :], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# maglev_select — L4-LB backend selection (paper §6.1, Maglev NSDI'16)
+# ---------------------------------------------------------------------------
+
+def maglev_hash5(src_ip, dst_ip, src_port, dst_port, proto) -> jax.Array:
+    """int32 5-tuple hash (wraps like uint32); mirrored bit-exactly by the
+    Pallas kernel in repro.kernels.maglev."""
+    h = src_ip.astype(jnp.int32)
+    for v in (dst_ip, src_port, dst_port, proto):
+        h = h * jnp.int32(1000003) ^ v.astype(jnp.int32)
+    return h & jnp.int32(0x7FFFFFFF)
+
+
+def maglev_select(src_ip, dst_ip, src_port, dst_port, proto,
+                  table, backend_ips) -> jax.Array:
+    """Hash the 5-tuple, index the Maglev lookup table, return the backend
+    VIP per packet: all packet fields (B,) int32 -> (B,) int32."""
+    h = maglev_hash5(src_ip, dst_ip, src_port, dst_port, proto)
+    idx = (h % table.shape[0]).astype(jnp.int32)
+    return backend_ips[table[idx]]
+
+
+# ---------------------------------------------------------------------------
+# payload_store / payload_fetch — parked-payload movement (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+def payload_store(table, payload, idx, enb) -> jax.Array:
+    """Split stage 3..N scatter: ``table[idx[b]] = payload[b]`` where
+    ``enb[b]``.  table: (M, W); payload: (B, W); idx: (B,) int32;
+    enb: (B,) bool.  Dtype-polymorphic: the core uses byte rows (uint8),
+    the kernel parity tests word rows (int32)."""
+    m = table.shape[0]
+    rows = jnp.where(enb, idx, m)  # out-of-bounds rows dropped
+    return table.at[rows].set(payload, mode="drop")
+
+
+def payload_fetch(table, idx, mask):
+    """Merge stage 3..N gather+clear (Alg. 2 lines 21-23).  Returns
+    (gathered (B, W) with unmatched rows zeroed, table with matched rows
+    cleared)."""
+    m = table.shape[0]
+    gathered = jnp.where(mask[:, None], table[idx], 0)
+    rows = jnp.where(mask, idx, m)
+    cleared = table.at[rows].set(jnp.zeros_like(gathered), mode="drop")
+    return gathered, cleared

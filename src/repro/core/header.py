@@ -6,56 +6,30 @@ validate the PayloadPark header before merging the stored payloads with
 packets returning from the NF server" (§3.2).
 
 We use CRC-16/CCITT-FALSE (poly 0x1021, init 0xFFFF) over the 4 tag bytes
-(little-endian ti, clk).  ``crc16_tag`` is the pure-jnp oracle; the Pallas
-kernel in ``repro.kernels.crc16`` must match it bit-exactly.
+(little-endian ti, clk).  The math lives in the backend registry
+(``repro.backend.ref.crc16_tag`` is the single jnp implementation,
+``repro.kernels.crc16`` the Pallas one); this module is the dataplane-facing
+entry point that routes through ``repro.backend.dispatch`` so Split/Merge
+compute and validate tags on whichever backend the caller selected.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-CRC_POLY = 0x1021
-CRC_INIT = 0xFFFF
-
-
-def crc16_bytes(data: jax.Array) -> jax.Array:
-    """CRC-16/CCITT-FALSE over the trailing axis of a uint8/int32 byte array.
-
-    ``data``: (..., N) byte values in [0, 255].  Returns (...,) int32 CRC.
-    Bitwise, branch-free formulation (P4-style predication, paper §2: actions
-    are short VLIW programs — the same constraint shapes this kernel).
-    """
-    data = data.astype(jnp.int32)
-    n = data.shape[-1]
-    crc = jnp.full(data.shape[:-1], CRC_INIT, jnp.int32)
-
-    def per_byte(i, crc):
-        crc = crc ^ (data[..., i] << 8)
-
-        def per_bit(_, c):
-            hi = (c >> 15) & 1
-            c = (c << 1) & 0xFFFF
-            return jnp.where(hi == 1, c ^ CRC_POLY, c)
-
-        return jax.lax.fori_loop(0, 8, per_bit, crc)
-
-    return jax.lax.fori_loop(0, n, per_byte, crc)
+# Re-exports: the constants and byte-level routine are owned by the backend
+# ref module (shared with the Pallas kernel); historical importers keep
+# working through these names.
+from repro.backend.ref import (CRC_INIT, CRC_POLY,  # noqa: F401
+                               crc16_bytes, tag_bytes)
+from repro.backend.registry import dispatch
 
 
-def tag_bytes(ti: jax.Array, clk: jax.Array) -> jax.Array:
-    """Pack (ti, clk) into 4 little-endian bytes: (..., 4) int32."""
-    ti = ti.astype(jnp.int32)
-    clk = clk.astype(jnp.int32)
-    return jnp.stack(
-        [ti & 0xFF, (ti >> 8) & 0xFF, clk & 0xFF, (clk >> 8) & 0xFF], axis=-1
-    )
+def crc16_tag(ti: jax.Array, clk: jax.Array, backend=None) -> jax.Array:
+    """CRC over the PayloadPark tag on the selected backend."""
+    return dispatch("crc16_tag", backend)(ti, clk)
 
 
-def crc16_tag(ti: jax.Array, clk: jax.Array) -> jax.Array:
-    """CRC over the PayloadPark tag (oracle; see repro.kernels.crc16)."""
-    return crc16_bytes(tag_bytes(ti, clk))
-
-
-def tag_valid(ti: jax.Array, clk: jax.Array, crc: jax.Array) -> jax.Array:
+def tag_valid(ti: jax.Array, clk: jax.Array, crc: jax.Array,
+              backend=None) -> jax.Array:
     """Header validation performed by Merge before touching the tables."""
-    return crc16_tag(ti, clk) == crc
+    return crc16_tag(ti, clk, backend=backend) == crc

@@ -6,9 +6,12 @@ machine.  P4 guarantees *atomic, per-packet sequential* register semantics
 the match-action pipeline are guaranteed to get different indexes", §5); we
 reproduce that with a ``lax.scan`` over packets in arrival (FIFO) order for
 the control plane (tagger + metadata table), while the bulk payload movement
-(the paper's stage 3..N striping across MAT-local register arrays, Fig. 4) is
-a vectorized scatter/gather that can be routed through the Pallas TPU kernels
-in ``repro.kernels`` (``use_kernel=True``).
+(the paper's stage 3..N striping across MAT-local register arrays, Fig. 4)
+and the per-packet tag CRCs route through the dataplane-backend registry
+(``repro.backend``, DESIGN.md §9): a frozen ``BackendConfig`` selects the
+jnp reference or the Pallas TPU kernels per primitive.  The retired
+``use_kernel: bool`` flag is still accepted as a deprecated alias
+(True -> ``backend="pallas_interpret"``).
 
 Design mapping (see DESIGN.md §2):
   P4 MAT columns holding payload blocks  ->  lane-striped rows of ``ptable``
@@ -43,6 +46,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.backend import coerce_backend, dispatch
 from repro.core import counters as C
 from repro.core.header import crc16_tag, tag_valid
 from repro.core.packet import OP_DROP, PacketBatch
@@ -182,15 +186,20 @@ def _split_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
 
 
 def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-             use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+             backend=None,
+             use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
     """Split operation: park payload prefixes, emit header-only packets.
 
     Returns (new_state, packets-as-sent-to-the-NF-server).  Every alive packet
     leaves with a PayloadPark header (ENB=1 if parked, else 0 — §6.1).
 
+    ``backend`` selects the payload_store / crc16_tag implementations
+    (``repro.backend``); ``use_kernel`` is the deprecated alias.
+
     This is the un-jitted body, composable inside ``lax.scan`` (the
     multi-pipe engine, DESIGN.md §3); ``split`` is the jitted entry point.
     """
+    backend = coerce_backend(backend, use_kernel)
     (ti, clk, meta_exp, meta_clk, meta_len), d = _split_control(cfg, state, pkts)
 
     # -- stage 3..N: stripe payload blocks into the payload table -----------
@@ -202,12 +211,8 @@ def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
         park = jnp.pad(park, ((0, 0), (0, cfg.park_bytes - park.shape[1])))
     lane = jnp.arange(cfg.park_bytes)[None, :]
     park = jnp.where(lane < d["park_len"][:, None], park, 0)
-    if use_kernel:
-        from repro.kernels.payload_store import ops as store_ops
-        ptable = store_ops.payload_store(state.ptable, park, d["ti"], d["enb"])
-    else:
-        rows = jnp.where(d["enb"], d["ti"], cfg.capacity)  # OOB rows dropped
-        ptable = state.ptable.at[rows].set(park, mode="drop")
+    ptable = dispatch("payload_store", backend)(
+        state.ptable, park, d["ti"], d["enb"])
 
     counters = state.counters
     counters = C.bump(counters, "splits", jnp.sum(d["enb"]))
@@ -236,12 +241,14 @@ def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
         pp_op=jnp.zeros_like(pkts.pp_op),
         pp_ti=jnp.where(d["enb"], d["ti"], 0),
         pp_clk=jnp.where(d["enb"], d["clk"], 0),
-        pp_crc=jnp.where(d["enb"], crc16_tag(d["ti"], d["clk"]), 0),
+        pp_crc=jnp.where(d["enb"],
+                         crc16_tag(d["ti"], d["clk"], backend=backend), 0),
     )
     return new_state, out
 
 
-split = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(split_fn)
+split = partial(jax.jit,
+                static_argnames=("cfg", "backend", "use_kernel"))(split_fn)
 
 
 # --------------------------------------------------------------------------
@@ -257,7 +264,8 @@ def _select_rows(mask, a, b):
 
 
 def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-              use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+              backend=None,
+              use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
     """One recirculation pass for packets re-injected through the
     recirculation port (paper §6.2.5).  Two cases, handled in order:
 
@@ -276,8 +284,10 @@ def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     Packets come out NF-bound; lane scheduling and the recirculation-port
     budget live in ``switchsim.engine`` (DESIGN.md §6).  The partial-row
     append stays on the plain-JAX path (the Pallas store kernel writes
-    whole rows); retry Splits honour ``use_kernel``.
+    whole rows — a recorded deviation, DESIGN.md §9); retry Splits honour
+    ``backend`` (``use_kernel`` is the deprecated alias).
     """
+    backend = coerce_backend(backend, use_kernel)
     counters = C.bump(state.counters, "recirculations",
                       jnp.sum(pkts.alive & pkts.pp_valid))
 
@@ -318,27 +328,36 @@ def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     # -- retry: a second Split attempt for ENB=0 packets --------------------
     retry = pkts.alive & pkts.pp_valid & (pkts.pp_enb == 0)
     retry_in = ext_out.replace(alive=retry)
-    new_state, retry_out = split_fn(cfg, mid, retry_in, use_kernel=use_kernel)
+    new_state, retry_out = split_fn(cfg, mid, retry_in, backend=backend)
     # split_fn rewrites header fields of its whole batch; keep its result
     # only for the retry rows, the extension result for everything else.
     return new_state, _select_rows(retry, retry_out, ext_out)
 
 
-recirc = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(recirc_fn)
+recirc = partial(jax.jit,
+                 static_argnames=("cfg", "backend", "use_kernel"))(recirc_fn)
 
 
 # --------------------------------------------------------------------------
 # Merge + Explicit Drop (paper Algorithm 2, §6.2.4)
 # --------------------------------------------------------------------------
 
-def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
-    """Sequential metadata validation/free pass (Alg. 2 stages 1-2)."""
+def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
+                   backend=None):
+    """Sequential metadata validation/free pass (Alg. 2 stages 1-2).
+
+    The tag CRC check is pure per-packet math (independent of the table
+    carry), so it runs batched through the backend dispatch BEFORE the
+    sequential scan — on ``backend="pallas"`` the whole header validation
+    is one kernel call instead of a per-packet bit loop.
+    """
+    crc_ok_all = tag_valid(pkts.pp_ti, pkts.pp_clk, pkts.pp_crc,
+                           backend=backend)
 
     def step(carry, x):
         meta_exp, meta_clk, meta_len = carry
-        alive, valid, enb, op, ti, clk, crc = x
+        alive, valid, enb, op, ti, clk, crc_ok = x
         is_pp = alive & valid & (enb == 1)
-        crc_ok = tag_valid(ti, clk, crc)
         checked = is_pp & crc_ok
         gen_ok = meta_clk[ti] == clk
         matched = checked & gen_ok                       # Alg. 2 line 11
@@ -358,14 +377,15 @@ def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
         return (meta_exp, meta_clk, meta_len), out
 
     xs = (pkts.alive, pkts.pp_valid, pkts.pp_enb, pkts.pp_op,
-          pkts.pp_ti, pkts.pp_clk, pkts.pp_crc)
+          pkts.pp_ti, pkts.pp_clk, crc_ok_all)
     carry0 = (state.meta_exp, state.meta_clk, state.meta_len)
     (meta_exp, meta_clk, meta_len), outs = jax.lax.scan(step, carry0, xs)
     return (meta_exp, meta_clk, meta_len), outs
 
 
 def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-             use_kernel: bool = False) -> tuple[ParkState, PacketBatch]:
+             backend=None,
+             use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
     """Merge (and Explicit Drop) for packets returning from the NF server.
 
     Outcomes per packet:
@@ -374,23 +394,20 @@ def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
       * ENB=1, OP=drop, tag valid: slot freed, packet consumed (§6.2.4).
       * CRC or generation mismatch: packet dropped, counted.
 
+    ``backend`` selects the payload_fetch / crc16_tag implementations
+    (``repro.backend``); ``use_kernel`` is the deprecated alias.
+
     Un-jitted body for ``lax.scan`` composition (DESIGN.md §3); ``merge`` is
     the jitted entry point.
     """
-    (meta_exp, meta_clk, meta_len), d = _merge_control(cfg, state, pkts)
+    backend = coerce_backend(backend, use_kernel)
+    (meta_exp, meta_clk, meta_len), d = _merge_control(cfg, state, pkts,
+                                                       backend=backend)
 
     # -- stage 3..N: gather payload blocks, then clear the rows --------------
     fetch = d["matched"] & ~d["is_drop_op"]
-    if use_kernel:
-        from repro.kernels.payload_fetch import ops as fetch_ops
-        parked, ptable = fetch_ops.payload_fetch(
-            state.ptable, pkts.pp_ti, d["matched"])
-    else:
-        parked = state.ptable[pkts.pp_ti]  # (B, park_bytes)
-        parked = jnp.where(d["matched"][:, None], parked, 0)
-        rows = jnp.where(d["matched"], pkts.pp_ti, cfg.capacity)
-        ptable = state.ptable.at[rows].set(
-            jnp.zeros_like(parked), mode="drop")
+    parked, ptable = dispatch("payload_fetch", backend)(
+        state.ptable, pkts.pp_ti, d["matched"])
 
     counters = state.counters
     counters = C.bump(counters, "merges", jnp.sum(fetch))
@@ -434,7 +451,8 @@ def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     return new_state, out
 
 
-merge = partial(jax.jit, static_argnames=("cfg", "use_kernel"))(merge_fn)
+merge = partial(jax.jit,
+                static_argnames=("cfg", "backend", "use_kernel"))(merge_fn)
 
 
 def stats(state: ParkState) -> dict[str, Any]:

@@ -1,7 +1,3 @@
-"""Pure-jnp oracle for the firewall ACL match."""
-import jax.numpy as jnp
-
-
-def acl_match_ref(src_ip, rules):
-    """src_ip: (B,) int32; rules: (R,) int32 -> (B,) bool blocked."""
-    return jnp.any(src_ip[:, None] == rules[None, :], axis=1)
+"""Oracle for the firewall ACL match kernel: the backend registry's single
+jnp reference implementation (repro.backend.ref)."""
+from repro.backend.ref import acl_match as acl_match_ref  # noqa: F401

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.header import CRC_INIT, CRC_POLY
+from repro.backend.ref import CRC_INIT, CRC_POLY
 
 LANES = 128
 

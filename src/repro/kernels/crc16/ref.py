@@ -1,2 +1,3 @@
-"""Oracle for the CRC-16 tag kernel: the core's own implementation."""
-from repro.core.header import crc16_tag as crc16_tag_ref  # noqa: F401
+"""Oracle for the CRC-16 tag kernel: the backend registry's single jnp
+reference implementation (repro.backend.ref)."""
+from repro.backend.ref import crc16_tag as crc16_tag_ref  # noqa: F401

@@ -7,7 +7,8 @@ stream through.  The double gather (table -> backend id -> backend ip) is
 fused into one VMEM-local pass — the TPU analogue of the paper's two chained
 MAT lookups.
 
-The hash matches nf.maglev._hash5 bit-exactly (int32 wrap semantics).
+The hash matches repro.backend.ref.maglev_hash5 bit-exactly (int32 wrap
+semantics).
 """
 from __future__ import annotations
 

@@ -1,11 +1,3 @@
-"""Pure-jnp oracle for Maglev backend selection (must equal nf.maglev)."""
-import jax.numpy as jnp
-
-from repro.nf.maglev import _hash5
-
-
-def maglev_select_ref(src_ip, dst_ip, src_port, dst_port, proto,
-                      table, backend_ips):
-    h = _hash5(src_ip, dst_ip, src_port, dst_port, proto)
-    idx = (h % table.shape[0]).astype(jnp.int32)
-    return backend_ips[table[idx]]
+"""Oracle for Maglev backend selection: the backend registry's single jnp
+reference implementation (repro.backend.ref; nf.maglev dispatches to it)."""
+from repro.backend.ref import maglev_select as maglev_select_ref  # noqa: F401

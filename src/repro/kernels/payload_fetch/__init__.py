@@ -1,8 +1,9 @@
 """Pallas payload-fetch kernel: Merge stage 3..N (gather + clear rows).
 
 Gathers parked payload rows for returning packets and zeroes their slots;
-the ``use_kernel=True`` data path of ``core.park.merge`` / ``merge_fn`` and
-of the scanned engine (DESIGN.md §3).  See README.md here for the striping
+the ``payload_fetch`` primitive of the backend registry (``repro.backend``,
+DESIGN.md §9), dispatched from ``core.park.merge`` / ``merge_fn`` and the
+scanned engine (DESIGN.md §3).  See README.md here for the striping
 scheme and kernel.py / ops.py for the implementation.
 """
 from repro.kernels.payload_fetch.ops import payload_fetch  # noqa: F401

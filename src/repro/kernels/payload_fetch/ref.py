@@ -1,15 +1,4 @@
-"""Pure-jnp oracle for the payload_fetch gather+clear (Merge stage 3..N)."""
-from __future__ import annotations
-
-import jax.numpy as jnp
-
-
-def payload_fetch_ref(table, idx, mask):
-    """table: (M, W) int32; idx: (B,); mask: (B,) bool.
-    Returns (gathered (B, W) with unmatched rows zeroed, new table with
-    matched rows cleared) — Alg. 2 lines 21-23."""
-    m = table.shape[0]
-    gathered = jnp.where(mask[:, None], table[idx], 0)
-    rows = jnp.where(mask, idx, m)
-    cleared = table.at[rows].set(0, mode="drop")
-    return gathered, cleared
+"""Oracle for the payload_fetch gather+clear (Merge stage 3..N): the
+backend registry's single jnp reference implementation
+(repro.backend.ref)."""
+from repro.backend.ref import payload_fetch as payload_fetch_ref  # noqa: F401

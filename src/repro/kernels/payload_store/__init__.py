@@ -1,8 +1,9 @@
 """Pallas payload-store kernel: Split stage 3..N (park payload rows).
 
 Scatters parked payload prefixes into the lane-striped payload table; the
-``use_kernel=True`` data path of ``core.park.split`` / ``split_fn`` and of
-the scanned engine (DESIGN.md §3).  See README.md here for the striping
+``payload_store`` primitive of the backend registry (``repro.backend``,
+DESIGN.md §9), dispatched from ``core.park.split`` / ``split_fn`` and the
+scanned engine (DESIGN.md §3).  See README.md here for the striping
 scheme and kernel.py / ops.py for the implementation.
 """
 from repro.kernels.payload_store.ops import payload_store  # noqa: F401

@@ -1,12 +1,5 @@
-"""Pure-jnp oracle for the payload_store scatter (Split stage 3..N)."""
-from __future__ import annotations
-
-import jax.numpy as jnp
-
-
-def payload_store_ref(table, payload, idx, enb):
-    """table: (M, W) int32; payload: (B, W) int32; idx: (B,) int32;
-    enb: (B,) bool.  Rows with enb=True are written at table[idx]."""
-    m = table.shape[0]
-    rows = jnp.where(enb, idx, m)  # out-of-bounds rows dropped
-    return table.at[rows].set(payload, mode="drop")
+"""Oracle for the payload_store scatter (Split stage 3..N): the backend
+registry's single jnp reference implementation (repro.backend.ref).
+Dtype-polymorphic — the parity tests drive it with int32 word rows, the
+core with uint8 byte rows."""
+from repro.backend.ref import payload_store as payload_store_ref  # noqa: F401

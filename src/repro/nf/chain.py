@@ -27,28 +27,35 @@ class Chain:
     def init_state(self) -> tuple:
         return tuple(nf.init_state() for nf in self.nfs)
 
-    def run(self, states: tuple, pkts: PacketBatch):
-        """Returns (new_states, pkts_out, dropped_by_chain, total_cycles)."""
+    def run(self, states: tuple, pkts: PacketBatch, backend=None):
+        """Returns (new_states, pkts_out, dropped_by_chain, total_cycles).
+
+        ``backend`` (``repro.backend.BackendConfig`` / name / None) selects
+        each NF's hot-path primitive implementation and is threaded to every
+        NF uniformly."""
         dropped = jnp.zeros_like(pkts.alive)
         total_cycles = 0.0
         new_states = []
         for nf, st in zip(self.nfs, states):
-            st, pkts, drop, cycles = nf(st, pkts)
+            st, pkts, drop, cycles = nf(st, pkts, backend=backend)
             dropped = dropped | drop
             total_cycles += cycles
             new_states.append(st)
         return tuple(new_states), pkts, dropped, total_cycles
 
-    def cycle_costs(self) -> tuple[float, ...]:
+    def cycle_costs(self, backend=None) -> tuple[float, ...]:
         """Per-NF CPU cycle costs, in chain order, for the analytic model
         (perfmodel wants the slowest single NF — OpenNetVM pins each NF to
-        its own core, §6.1).  Probed by running each NF on one dead packet;
-        every NF reports its cycle cost as a per-call Python float."""
+        its own core, §6.1).  Probed by running each NF on one dead packet
+        through the SAME backend dispatch the simulation uses — a
+        Pallas-backed NF is probed on the Pallas path, so the analytic
+        model can never silently mix backends; every NF reports its cycle
+        cost as a per-call Python float."""
         from repro.core.packet import dead_batch
         probe = dead_batch(1, 16)
         costs = []
         for nf in self.nfs:
-            _, _, _, cycles = nf(nf.init_state(), probe)
+            _, _, _, cycles = nf(nf.init_state(), probe, backend=backend)
             costs.append(float(cycles))
         return tuple(costs)
 

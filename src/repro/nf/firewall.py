@@ -5,8 +5,11 @@ addresses. The firewall in the three-NF chain has 20 rules, and the two-NF
 chain has a single rule in its firewall."  §6.2.4 varies the proportion of
 blocked addresses to control the drop rate.
 
-Header-only by construction: reads ``src_ip`` exclusively.  The batched
-rule-match is also available as a Pallas kernel (repro.kernels.acl_match).
+Header-only by construction: reads ``src_ip`` exclusively.  The rule match
+is the ``acl_match`` primitive of the dataplane-backend registry
+(``repro.backend``, DESIGN.md §9): the jnp reference and the Pallas kernel
+(repro.kernels.acl_match) are selected by the ``backend`` argument threaded
+down from the chain.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.backend import dispatch
 from repro.core.packet import PacketBatch
 
 # Rough per-rule linear-probe cost in CPU cycles, calibrated so a 20-rule
@@ -31,10 +35,10 @@ class Firewall:
     def init_state(self):
         return jnp.asarray(list(self.rules), jnp.int32).reshape(-1)
 
-    def __call__(self, state, pkts: PacketBatch):
+    def __call__(self, state, pkts: PacketBatch, backend=None):
         rules = state  # (R,) int32
         # Linear probe: compare every packet against every rule.
-        blocked = jnp.any(pkts.src_ip[:, None] == rules[None, :], axis=1)
+        blocked = dispatch("acl_match", backend)(pkts.src_ip, rules)
         drop = pkts.alive & blocked
         out = pkts.replace(alive=pkts.alive & ~blocked)
         cycles = CYCLES_BASE + CYCLES_PER_RULE * rules.shape[0]

@@ -4,8 +4,11 @@ Builds the Maglev consistent-hashing lookup table at configuration time (the
 permutation fill is inherently sequential and runs once, in numpy), then
 performs vectorized per-packet backend selection: hash the 5-tuple, index the
 lookup table, rewrite ``dst_ip`` to the chosen backend VIP target.  The
-per-packet selection is also available as a Pallas kernel
-(repro.kernels.maglev) since it is the LB's only per-packet hot spot.
+per-packet selection — the LB's only per-packet hot spot — is the
+``maglev_select`` primitive of the dataplane-backend registry
+(``repro.backend``, DESIGN.md §9): jnp reference in ``repro.backend.ref``,
+Pallas kernel in ``repro.kernels.maglev``, chosen by the ``backend``
+argument threaded down from the chain.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
+from repro.backend import dispatch
 from repro.core.packet import PacketBatch
 
 CYCLES = 120.0  # hash + table lookup + rewrite
@@ -54,15 +58,6 @@ def build_table(backends: tuple[int, ...], table_size: int) -> np.ndarray:
     return entry
 
 
-def _hash5(src_ip, dst_ip, src_port, dst_port, proto):
-    """int32 5-tuple hash (wraps like uint32); mirrored bit-exactly by the
-    Pallas kernel in repro.kernels.maglev."""
-    h = src_ip.astype(jnp.int32)
-    for v in (dst_ip, src_port, dst_port, proto):
-        h = h * jnp.int32(1000003) ^ v.astype(jnp.int32)
-    return h & jnp.int32(0x7FFFFFFF)
-
-
 @dataclasses.dataclass(frozen=True)
 class MaglevLB:
     backends: tuple[int, ...] = tuple(0x0A000100 + i for i in range(8))
@@ -74,12 +69,10 @@ class MaglevLB:
             backend_ips=jnp.asarray(list(self.backends), jnp.int32),
         )
 
-    def __call__(self, state, pkts: PacketBatch):
-        h = _hash5(pkts.src_ip, pkts.dst_ip, pkts.src_port, pkts.dst_port,
-                   pkts.proto)
-        idx = (h % self.table_size).astype(jnp.int32)
-        backend = state["table"][idx]
-        new_dst = state["backend_ips"][backend]
+    def __call__(self, state, pkts: PacketBatch, backend=None):
+        new_dst = dispatch("maglev_select", backend)(
+            pkts.src_ip, pkts.dst_ip, pkts.src_port, pkts.dst_port,
+            pkts.proto, state["table"], state["backend_ips"])
         out = pkts.replace(
             dst_ip=jnp.where(pkts.alive, new_dst, pkts.dst_ip))
         drop = jnp.zeros_like(pkts.alive)

@@ -79,7 +79,9 @@ class Nat:
             exp=jnp.zeros((self.capacity,), jnp.int32),  # 0 = free slot
         )
 
-    def __call__(self, state, pkts: PacketBatch):
+    def __call__(self, state, pkts: PacketBatch, backend=None):
+        # header-only table logic; no registry primitive applies, but the
+        # chain threads ``backend`` uniformly through every NF
         cap = self.capacity
 
         def step(carry, x):

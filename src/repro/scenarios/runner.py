@@ -115,13 +115,14 @@ def run_matrix(specs, time_runs: bool = False,
     results: list = [None] * len(prepared)
     for key, members in groups.items():
         (cfg, chain, window, _chunk, _steps, _pmax, explicit_drops,
-         _lane) = key
+         _lane, backend) = key
         stacked = _cat_pipe_axis([prepared[i].traces for i in members])
 
         def run(cfg=cfg, chain=chain, stacked=stacked, window=window,
-                explicit_drops=explicit_drops):
+                explicit_drops=explicit_drops, backend=backend):
             return E.run_pipes(cfg, chain, stacked, window=window,
-                               explicit_drops=explicit_drops)
+                               explicit_drops=explicit_drops,
+                               backend=backend)
 
         res = run()
         if time_runs:
@@ -151,7 +152,7 @@ def run_matrix(specs, time_runs: bool = False,
                 per_pipe_peak_occupancy=res.per_pipe_peak_occupancy[lo:hi],
                 gain=E.goodput_gain_from_telemetry(tel),
                 steer_stats=p.steer_stats,
-                nf_cycles=chain.cycle_costs(),
+                nf_cycles=chain.cycle_costs(backend=backend),
                 wall_s=group_wall / len(members),
                 group_size=len(members),
                 group_wall_s=group_wall,
@@ -169,7 +170,8 @@ def verify_oracle(result: ScenarioResult) -> None:
     """Assert engine ≡ host loop (counters + telemetry) for one point.
 
     Re-runs ``simulate_loop`` per pipe on the pipe's flat trace (dead
-    padding rows are no-ops for the loop exactly as for the engine) and
+    padding rows are no-ops for the loop exactly as for the engine), on
+    the point's own backend (the loop dispatches the same primitives), and
     compares against the engine's per-pipe counters and telemetry.
     Raises ``OracleMismatch`` on any difference.
     """
@@ -184,7 +186,8 @@ def verify_oracle(result: ScenarioResult) -> None:
         flat = from_time_major(jax.tree.map(lambda a: a[pipe], p.traces))
         loop = simulate_loop(cfg, p.chain, flat, window=spec.window,
                              chunk=spec.chunk,
-                             explicit_drops=spec.explicit_drops)
+                             explicit_drops=spec.explicit_drops,
+                             backend=spec.backend_config())
         if loop.counters != result.per_pipe_counters[pipe]:
             raise OracleMismatch(
                 f"{spec.name} pipe {pipe}: counters diverged\n"

@@ -23,6 +23,7 @@ import itertools
 import jax
 import numpy as np
 
+from repro.backend import BackendConfig, as_config
 from repro.core.park import ParkConfig
 from repro.core.packet import PacketBatch, to_time_major
 from repro.nf.chain import Chain
@@ -45,6 +46,10 @@ class ScenarioSpec:
     ``src_ip`` to a deterministic ``flows``-IP pool (flow structure for
     NAT/LB plus a workload-independent firewall rule set); 0 keeps the
     seed benches' behaviour (random IPs, rules drawn from the traffic).
+    ``backend`` names the dataplane-backend the point runs on
+    (``repro.backend``: "ref" | "pallas" | "pallas_interpret" | "auto") —
+    a first-class grid axis, so ref-vs-Pallas sweeps ride the same runner
+    as every other comparison (DESIGN.md §9).
     """
 
     name: str
@@ -63,8 +68,10 @@ class ScenarioSpec:
     seed: int = 0
     flows: int = 0
     fw_rules: int = 20
+    backend: str = "auto"
 
     def __post_init__(self):
+        as_config(self.backend)  # validates the backend name eagerly
         if self.packets % self.chunk:
             raise ValueError(
                 f"{self.name}: packets ({self.packets}) must be a multiple "
@@ -86,6 +93,11 @@ class ScenarioSpec:
         return ParkConfig(capacity=self.capacity, max_exp=self.max_exp,
                           pmax=self.pmax, recirculation=self.recirc,
                           recirc_frac=self.recirc_frac)
+
+    def backend_config(self) -> BackendConfig:
+        """Concrete (platform-resolved) backend selection: "auto" and its
+        resolution share one compile group on any given host."""
+        return as_config(self.backend).concrete()
 
     def as_dict(self) -> dict:
         """JSON-ready form for the schema-v2 artifact ``matrix`` block."""
@@ -207,13 +219,15 @@ def compile_key(spec: ScenarioSpec, chain: Chain, steps: int):
     stacked pipe traces: equal ParkConfig (capacity/max_exp/recirc mode and
     fraction -> equal state shapes and lane width), equal chain constants,
     equal trace geometry (``steps`` is taken from the point's actual
-    steered traces, so per-pipe capacity rounding is reflected exactly).
-    Points that differ only in workload, seed or flow structure batch
-    together; shape-changing axes (occupancy/capacity, recirc_frac, chunk,
-    window) fall back to the engine's lru_cache-keyed per-point loop.
+    steered traces, so per-pipe capacity rounding is reflected exactly),
+    and the same concrete backend selection (a ref point and a Pallas
+    point are different XLA programs even at equal shapes).  Points that
+    differ only in workload, seed or flow structure batch together;
+    shape-changing axes (occupancy/capacity, recirc_frac, chunk, window)
+    fall back to the engine's lru_cache-keyed per-point loop.
     """
     from repro.switchsim import engine as E
     cfg = spec.park_config()
     lane = E.recirc_slots(cfg, spec.chunk)
     return (cfg, chain, spec.window, spec.chunk, steps, spec.pmax,
-            spec.explicit_drops, lane)
+            spec.explicit_drops, lane, spec.backend_config())

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import coerce_backend
 from repro.core import counters as C
 from repro.core.packet import PacketBatch, gather_rows
 from repro.core.park import (ParkConfig, ParkState, init_state, merge_fn,
@@ -178,7 +179,7 @@ def _cat_rows(a: PacketBatch, b: PacketBatch) -> PacketBatch:
 
 
 def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
-                explicit_drops: bool, use_kernel: bool, collect_sent: bool,
+                explicit_drops: bool, backend, collect_sent: bool,
                 recirc: int):
     """Single-pipe scan body: trace (T+pad, chunk, ...) -> ys + final.
 
@@ -206,9 +207,8 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
             if recirc:
                 # Second pass for packets re-injected at the previous step
                 # (their wire bytes were paid on first arrival).
-                state, rout = recirc_fn(cfg, state, lane,
-                                        use_kernel=use_kernel)
-            state, out = split_fn(cfg, state, cin, use_kernel=use_kernel)
+                state, rout = recirc_fn(cfg, state, lane, backend=backend)
+            state, out = split_fn(cfg, state, cin, backend=backend)
             if recirc:
                 out, lane, n_denied = recirc_select(cfg, out, recirc)
                 state = dataclasses.replace(
@@ -220,7 +220,8 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
             else:
                 rec_b = rec_p = jnp.zeros((), jnp.int32)
                 nf_in = out
-            cstates, nf_out, dropped, _cycles = chain.run(cstates, nf_in)
+            cstates, nf_out, dropped, _cycles = chain.run(
+                cstates, nf_in, backend=backend)
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
             if window == 0:
@@ -233,7 +234,7 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
                 ring = jax.tree.map(
                     lambda r, v: jax.lax.dynamic_update_index_in_dim(
                         r, v, slot, axis=0), ring, nf_out)
-            state, m = merge_fn(cfg, state, returning, use_kernel=use_kernel)
+            state, m = merge_fn(cfg, state, returning, backend=backend)
             # Per-link telemetry ys, keyed by LinkTelemetry field names
             # (DESIGN.md §7); summed host-side in int64 by _finalize.
             ys = dict(
@@ -258,9 +259,11 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
 
 @lru_cache(maxsize=None)
 def _compiled(cfg: ParkConfig, chain: Chain, window: int,
-              explicit_drops: bool, use_kernel: bool, collect_sent: bool,
+              explicit_drops: bool, backend, collect_sent: bool,
               pipes: bool, recirc: int):
-    run = _build_scan(cfg, chain, window, explicit_drops, use_kernel,
+    # ``backend`` is a concrete (platform-resolved) BackendConfig, so the
+    # cache key — like the jit static args — specializes per backend.
+    run = _build_scan(cfg, chain, window, explicit_drops, backend,
                       collect_sent, recirc)
     if pipes:
         run = jax.vmap(run)
@@ -323,7 +326,8 @@ def run_engine(
     trace: PacketBatch,
     window: int = 1,
     explicit_drops: bool = False,
-    use_kernel: bool = False,
+    backend=None,
+    use_kernel: bool | None = None,
     collect_sent: bool = False,
 ) -> EngineResult:
     """Run one pipe over a time-major trace (T, chunk, ...) under one jit.
@@ -332,12 +336,16 @@ def run_engine(
     Python loop), but the whole timeline is a single compiled program.
     With ``cfg.recirculation`` the trace is padded one extra step so the
     recirculation lane drains, and NF-bound chunks gain ``recirc_slots``
-    leading lane rows.
+    leading lane rows.  ``backend`` selects the hot-path primitive
+    implementations (``repro.backend``, DESIGN.md §9) for Split/Merge,
+    header validation and the NF chain alike; ``use_kernel`` is the
+    deprecated alias (True -> "pallas_interpret").
     """
+    backend = coerce_backend(backend, use_kernel)
     chunk = jax.tree.leaves(trace)[0].shape[1]
     lane = recirc_slots(cfg, chunk)
     trace = _pad_trace(trace, window + (1 if lane else 0), axis=0)
-    fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
+    fn = _compiled(cfg, chain, window, explicit_drops, backend,
                    collect_sent, pipes=False, recirc=lane)
     state, ys = fn(trace)
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=0)
@@ -357,7 +365,8 @@ def run_pipes(
     traces: PacketBatch,
     window: int = 1,
     explicit_drops: bool = False,
-    use_kernel: bool = False,
+    backend=None,
+    use_kernel: bool | None = None,
     collect_sent: bool = False,
 ) -> PipesResult:
     """Run P independent pipes over (P, T, chunk, ...) traces, vmapped.
@@ -365,12 +374,14 @@ def run_pipes(
     Each pipe owns a fresh ``ParkState`` and NF-chain state (the paper's
     per-port pipes share nothing, §6.3.2); one compiled program drives all
     of them.  Byte totals and counters are aggregated across pipes.
+    ``backend``/``use_kernel`` behave exactly as in ``run_engine``.
     """
+    backend = coerce_backend(backend, use_kernel)
     n_pipes = jax.tree.leaves(traces)[0].shape[0]
     chunk = jax.tree.leaves(traces)[0].shape[2]
     lane = recirc_slots(cfg, chunk)
     traces = _pad_trace(traces, window + (1 if lane else 0), axis=1)
-    fn = _compiled(cfg, chain, window, explicit_drops, use_kernel,
+    fn = _compiled(cfg, chain, window, explicit_drops, backend,
                    collect_sent, pipes=True, recirc=lane)
     state, ys = fn(traces)
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=1)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import coerce_backend
 from repro.core import counters as C
 from repro.core.packet import PacketBatch, dead_batch, to_time_major
 from repro.core.park import (ParkConfig, ParkState, init_state, merge, recirc,
@@ -77,19 +78,23 @@ def simulate(
     window: int = 1,
     chunk: int = 256,
     explicit_drops: bool = False,
-    use_kernel: bool = False,
+    backend=None,
+    use_kernel: bool | None = None,
 ) -> SimResult:
     """Stream ``pkts`` through split -> NF chain -> merge with ``window``
     chunks in flight.  Returns every merged chunk plus final switch state.
 
     Compatibility wrapper: delegates to the scanned engine (one compiled
     program, on-device accounting) and re-materializes the list-of-chunks
-    view the seed API exposed.
+    view the seed API exposed.  ``backend`` selects the hot-path primitive
+    implementations (``repro.backend``); ``use_kernel`` is the deprecated
+    alias (True -> "pallas_interpret").
     """
+    backend = coerce_backend(backend, use_kernel)
     trace = to_time_major(pkts, chunk)
     res = engine_mod.run_engine(
         cfg, chain, trace, window=window, explicit_drops=explicit_drops,
-        use_kernel=use_kernel, collect_sent=True)
+        backend=backend, collect_sent=True)
     t = res.merged.src_ip.shape[0]  # == trace steps (+1 recirc drain step)
     merged = [jax.tree.map(lambda a: a[i], res.merged) for i in range(t)]
     sent = [jax.tree.map(lambda a: a[i], res.sent) for i in range(t)]
@@ -112,7 +117,8 @@ def simulate_loop(
     window: int = 1,
     chunk: int = 256,
     explicit_drops: bool = False,
-    use_kernel: bool = False,
+    backend=None,
+    use_kernel: bool | None = None,
 ) -> SimResult:
     """The seed host-side chunk loop (reference implementation).
 
@@ -121,10 +127,13 @@ def simulate_loop(
     Kept as the behavioural oracle for ``simulate()`` / the engine; with
     ``cfg.recirculation`` it mirrors the engine's recirculation lane
     host-side (``_simulate_loop_recirc``) and stays the oracle there too.
+    The loop dispatches the SAME per-primitive backend as the engine, so
+    the engine≡loop invariant is asserted per backend.
     """
+    backend = coerce_backend(backend, use_kernel)
     if engine_mod.recirc_slots(cfg, chunk) > 0:
         return _simulate_loop_recirc(cfg, chain, pkts, window, chunk,
-                                     explicit_drops, use_kernel)
+                                     explicit_drops, backend)
     state = init_state(cfg)
     chain_states = chain.init_state()
     inflight: list = []
@@ -140,12 +149,13 @@ def simulate_loop(
             p, b = _alive_stats(cin)
             tel["wire_pkts"] += p
             tel["wire_bytes"] += b
-            state, out = split(cfg, state, cin, use_kernel=use_kernel)
+            state, out = split(cfg, state, cin, backend=backend)
             sent.append(out)
             p, b = _alive_stats(out)
             tel["to_server_pkts"] += p
             tel["to_server_bytes"] += b
-            chain_states, nf_out, dropped, _cycles = chain.run(chain_states, out)
+            chain_states, nf_out, dropped, _cycles = chain.run(
+                chain_states, out, backend=backend)
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
             inflight.append(nf_out)
@@ -154,7 +164,7 @@ def simulate_loop(
             p, b = _alive_stats(returning)
             tel["from_server_pkts"] += p
             tel["from_server_bytes"] += b
-            state, m = merge(cfg, state, returning, use_kernel=use_kernel)
+            state, m = merge(cfg, state, returning, backend=backend)
             merged.append(m)
             p, b = _alive_stats(m)
             tel["merged_pkts"] += p
@@ -174,7 +184,7 @@ def simulate_loop(
 
 
 def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
-                          use_kernel):
+                          backend):
     """Host-side mirror of the engine's recirculation timeline (DESIGN.md
     §6): same op order (recirc pass, Split, budget admission, NF, ring,
     Merge), same lane width, one drain step — kept as the executable oracle
@@ -197,8 +207,8 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
         p, b = _alive_stats(cin)
         tel["wire_pkts"] += p
         tel["wire_bytes"] += b
-        state, rout = recirc(cfg, state, lane, use_kernel=use_kernel)
-        state, out = split(cfg, state, cin, use_kernel=use_kernel)
+        state, rout = recirc(cfg, state, lane, backend=backend)
+        state, out = split(cfg, state, cin, backend=backend)
         out, lane, n_denied = engine_mod.recirc_select(cfg, out, lane_w)
         state = dataclasses.replace(
             state, counters=C.bump(state.counters, "recirc_budget_drops",
@@ -213,7 +223,8 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
         p, b = _alive_stats(nf_in)
         tel["to_server_pkts"] += p
         tel["to_server_bytes"] += b
-        chain_states, nf_out, dropped, _cycles = chain.run(chain_states, nf_in)
+        chain_states, nf_out, dropped, _cycles = chain.run(
+            chain_states, nf_in, backend=backend)
         if explicit_drops:
             nf_out = to_explicit_drops(nf_out, dropped)
         if window == 0:
@@ -225,7 +236,7 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
         p, b = _alive_stats(returning)
         tel["from_server_pkts"] += p
         tel["from_server_bytes"] += b
-        state, m = merge(cfg, state, returning, use_kernel=use_kernel)
+        state, m = merge(cfg, state, returning, backend=backend)
         if t >= window:
             merged.append(m)
         p, b = _alive_stats(m)
@@ -245,8 +256,9 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
     )
 
 
-def baseline_roundtrip(chain: Chain, pkts: PacketBatch):
-    """Non-PayloadPark reference: packets travel whole through the chain."""
+def baseline_roundtrip(chain: Chain, pkts: PacketBatch, backend=None):
+    """Non-PayloadPark reference: packets travel whole through the chain
+    (on the same backend as the parking run it is compared against)."""
     chain_states = chain.init_state()
-    _, out, dropped, cycles = chain.run(chain_states, pkts)
+    _, out, dropped, cycles = chain.run(chain_states, pkts, backend=backend)
     return out, dropped, cycles

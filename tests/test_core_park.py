@@ -215,14 +215,16 @@ def test_property_unique_live_tags(seed):
     assert len(set(map(int, clks))) == int(live.sum())
 
 
-def test_use_kernel_paths_match():
+def test_backend_paths_match():
+    """ref vs pallas_interpret through split/merge (the deprecated
+    use_kernel alias is covered by tests/test_backend.py)."""
     st0 = init_state(CFG)
     pkts = mk(3, 16, 400)
-    st_a, sent_a = split(CFG, st0, pkts, use_kernel=False)
-    st_b, sent_b = split(CFG, st0, pkts, use_kernel=True)
+    st_a, sent_a = split(CFG, st0, pkts, backend="ref")
+    st_b, sent_b = split(CFG, st0, pkts, backend="pallas_interpret")
     assert jnp.all(st_a.ptable == st_b.ptable)
     assert jnp.all(sent_a.payload == sent_b.payload)
-    st_a2, out_a = merge(CFG, st_a, sent_a, use_kernel=False)
-    st_b2, out_b = merge(CFG, st_b, sent_b, use_kernel=True)
+    st_a2, out_a = merge(CFG, st_a, sent_a, backend="ref")
+    st_b2, out_b = merge(CFG, st_b, sent_b, backend="pallas_interpret")
     assert jnp.all(out_a.payload == out_b.payload)
     assert jnp.all(st_a2.ptable == st_b2.ptable)
