@@ -29,14 +29,28 @@ Schema (version 2):
       "summary": {...},               # benchmark-specific headline numbers
       "matrix": {                     # optional (schema v2): the declarative
         "<scenario name>": {...}      #   ScenarioSpec fields behind each
-      }                               #   scenario, for artifact provenance
+      },                              #   scenario, for artifact provenance
+      "degradation": {                # optional (schema v2): graceful-
+        "ok": bool,                   #   degradation gate verdicts from the
+        "scenarios": {                #   adversarial families (DESIGN.md
+          "<scenario name>": {        #   §10) — compare.py FAILS an artifact
+            "metrics": {...},         #   carrying any false gate, and
+            "gates": [{"metric": str, #   requires every baseline gate to
+                       "op": str,     #   still exist in the candidate
+                       "bound": num|str,
+                       "value": num,
+                       "ok": bool}]
+          }
+        }
+      }
     }
 
 v1 -> v2: rows gained the optional ``scenario`` field and the top level
 gained the optional ``matrix`` block, both written by benches that run
 through ``repro.scenarios`` (the vmapped sweep runner); the optional
 top-level ``backend`` provenance field was added with the dataplane-backend
-layer (compare.py keys its per-backend baseline matching on it).
+layer (compare.py keys its per-backend baseline matching on it), the
+optional ``degradation`` block with the adversarial families.
 ``load_bench_json`` accepts only the current version; regenerate baselines
 when bumping.
 """
@@ -67,7 +81,8 @@ def rows_to_json(rows) -> list[dict]:
 
 def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
                      matrix: dict | None = None,
-                     backend: str | None = None) -> dict:
+                     backend: str | None = None,
+                     degradation: dict | None = None) -> dict:
     """Write one benchmark artifact; returns the payload written.
 
     ``matrix`` maps scenario names to their declarative spec dicts
@@ -75,6 +90,8 @@ def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
     does not run through the scenario subsystem.  ``backend`` records the
     dataplane backend a single-backend run used (omit it for multi-backend
     sweeps — each scenario's matrix entry carries its own).
+    ``degradation`` is the graceful-degradation block the adversarial
+    families emit (``repro.scenarios.degradation_block``).
     """
     payload = {
         "schema": SCHEMA_VERSION,
@@ -86,6 +103,8 @@ def write_bench_json(path: str, bench: str, rows, summary: dict | None = None,
         payload["matrix"] = matrix
     if backend is not None:
         payload["backend"] = backend
+    if degradation is not None:
+        payload["degradation"] = degradation
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -133,7 +152,30 @@ def load_bench_json(path: str) -> dict:
         raise BenchArtifactError(f"{path}: 'summary' must be an object")
     if not isinstance(payload.get("matrix", {}), dict):
         raise BenchArtifactError(f"{path}: 'matrix' must be an object")
+    if "degradation" in payload:
+        _validate_degradation(path, payload["degradation"])
     return payload
+
+
+def _validate_degradation(path: str, deg) -> None:
+    if not isinstance(deg, dict) or not isinstance(deg.get("ok"), bool) \
+            or not isinstance(deg.get("scenarios"), dict):
+        raise BenchArtifactError(
+            f"{path}: 'degradation' must be an object with a bool 'ok' "
+            f"and a 'scenarios' object")
+    for name, sc in deg["scenarios"].items():
+        if (not isinstance(sc, dict) or not isinstance(sc.get("metrics"), dict)
+                or not isinstance(sc.get("gates"), list)):
+            raise BenchArtifactError(
+                f"{path}: degradation.scenarios[{name!r}] must carry "
+                f"'metrics' (object) and 'gates' (list)")
+        for i, g in enumerate(sc["gates"]):
+            if (not isinstance(g, dict) or "metric" not in g or "op" not in g
+                    or "bound" not in g or "value" not in g
+                    or not isinstance(g.get("ok"), bool)):
+                raise BenchArtifactError(
+                    f"{path}: degradation gate {name}[{i}] must carry "
+                    f"metric/op/bound/value and a bool 'ok'")
 
 
 def row_map(payload: dict) -> dict[str, dict]:

@@ -1,0 +1,136 @@
+"""Adversarial & failure benchmark: the DESIGN.md §10 degradation gates.
+
+Runs the ``adversarial`` scenario family (repro.scenarios.adversarial) —
+parking-table exhaustion storms, NAT CLOCK-aging churn, a Maglev backend
+kill->recover round trip and NF-server failover in both drain/drop modes —
+through the vmapped sweep runner, and **asserts graceful degradation**:
+
+  * every per-scenario gate (``bounds_for``) holds: bounded drop rate, a
+    clean parked table at end of trace (or a leak attributable to killed
+    packets), bounded recovery time after a server fault;
+  * the wire-level drop rate is *monotone* in the attack fraction within
+    each exhaustion burst series (higher attack fractions are strict
+    supersets by construction, so a non-monotone drop rate means the
+    parking table failed non-gracefully);
+  * the churn points actually exercise the §10 stale-mapping rule
+    (``nat_stale_hits`` > 0) — a silent NAT would pass every bound;
+  * every point is re-checked engine ≡ host loop (counters + telemetry +
+    NF counters) *through its fault event* unless ``--no-verify``.
+
+Exits non-zero when any assertion fails.
+
+    PYTHONPATH=src python benchmarks/bench_adversarial.py
+    PYTHONPATH=src python benchmarks/bench_adversarial.py --tiny \
+        --json BENCH_adversarial.json
+
+Prints ``name,value,derived`` CSV rows like the other benches; ``--json``
+writes the schema-v2 BENCH_adversarial.json artifact whose ``degradation``
+block benchmarks/compare.py enforces against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+
+try:
+    from benchmarks.artifacts import write_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from artifacts import write_bench_json
+
+import repro.scenarios as S
+from repro.scenarios.adversarial import EXHAUST_FRACS
+
+
+def _exhaust_series(results: dict) -> dict[int, list[tuple[float, float]]]:
+    """burst -> [(frac, drop_rate)] in ascending-frac order."""
+    series: dict[int, list] = {}
+    for name, r in results.items():
+        if not name.startswith("exhaust_"):
+            continue
+        frac = float(r.spec.workload[2])
+        burst = int(r.spec.workload[3])
+        deg = S.degradation_metrics(r)
+        series.setdefault(burst, []).append((frac, deg["drop_rate"]))
+    for pts in series.values():
+        pts.sort()
+    return series
+
+
+def bench(tiny: bool, skip_oracle: bool = False):
+    specs = S.family("adversarial", tiny=tiny)
+    result_list = S.run_matrix(specs)
+    results = {r.spec.name: r for r in result_list}
+    rows = []
+    for name, r in results.items():
+        rows.extend(S.default_rows(r, "adversarial"))
+        for metric, value in S.degradation_metrics(r).items():
+            rows.append((f"adversarial/{name}/{metric}", value,
+                         f"fault={r.spec.fault.kind}", name))
+        if not skip_oracle:
+            # raises OracleMismatch on divergence — with the spec's fault
+            # mirrored into the loop, so the invariant is proven *through*
+            # the fault event, not around it
+            S.verify_oracle(r)
+            rows.append((
+                f"adversarial/{name}/oracle_identical", 1,
+                "engine==loop (counters+telemetry+nf) through fault", name))
+
+    degradation = S.degradation_block(result_list)
+    failures = [
+        f"{name}: {g['metric']} = {g['value']} violates "
+        f"{g['metric']} {g['op']} {g['bound']}"
+        for name, sc in degradation["scenarios"].items()
+        for g in sc["gates"] if not g["ok"]]
+
+    # monotonicity: within one burst series, a higher attack fraction may
+    # never *lower* the drop rate (supersets by construction)
+    for burst, pts in _exhaust_series(results).items():
+        assert [f for f, _ in pts] == sorted(EXHAUST_FRACS), pts
+        for (f_lo, d_lo), (f_hi, d_hi) in itertools.pairwise(pts):
+            if d_hi < d_lo:
+                failures.append(
+                    f"exhaust burst={burst}: drop rate not monotone in "
+                    f"attack fraction (f={f_lo}: {d_lo} -> f={f_hi}: {d_hi})")
+
+    if failures:
+        raise SystemExit("graceful-degradation gates violated:\n  "
+                         + "\n  ".join(failures))
+
+    sc = degradation["scenarios"]
+    summary = dict(
+        degradation_ok=degradation["ok"],
+        scenarios=len(results),
+        gates=sum(len(s["gates"]) for s in sc.values()),
+        exhaust_drop_rate_f00=sc["exhaust_f00_b8"]["metrics"]["drop_rate"],
+        exhaust_drop_rate_f75=sc["exhaust_f75_b8"]["metrics"]["drop_rate"],
+        failover_drain_leaked=sc["failover_drain"]["metrics"]["occ_final"],
+        failover_drop_leaked=sc["failover_drop"]["metrics"]["occ_final"],
+        nat_stale_hits=sc["churn_slow"]["metrics"]["nat_stale_hits"],
+    )
+    matrix = {s.name: s.as_dict() for s in specs}
+    return rows, summary, matrix, degradation
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 512 packets, chunk 64, small table")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the engine==loop oracle re-check per run")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the BENCH json artifact here "
+                         "(benchmarks/artifacts.py schema v2)")
+    args = ap.parse_args()
+    rows, summary, matrix, degradation = bench(
+        args.tiny, skip_oracle=args.no_verify)
+    print("name,value,derived")
+    for row in rows:
+        name, value, derived = row[0], row[1], row[2]
+        print(f"{name},{value},{str(derived).replace(',', ';')}")
+    if args.json:
+        write_bench_json(args.json, "adversarial", rows, summary=summary,
+                         matrix=matrix, degradation=degradation)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,11 @@ The simulation is deterministic (fixed PRNG keys, deterministic Maglev
 table), so in practice equal code produces equal artifacts; the bands
 absorb cross-version JAX drift without letting a real regression through.
 
+Artifacts carrying a ``degradation`` block (the adversarial families,
+DESIGN.md §10) are additionally gated on their graceful-degradation
+verdicts: any false gate fails the comparison, and every gate present in
+the committed baseline must still exist in the candidate.
+
 Baselines are matched per backend: a candidate is first matched to a
 baseline by basename (so a committed ``BENCH_pipeline_pallas_interpret``
 baseline wins if one exists); failing that, a candidate that records a
@@ -57,7 +62,7 @@ DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
 TOLERANCES: list[tuple[str, float | None, float]] = [
     (r"(/pps$|/wall_s$|/speedup$|_s$)", None, 0.0),
     (r"identical", 0.0, 0.0),
-    (r"(gain|saving|reduction|delta|uplift)", 0.08, 0.02),
+    (r"(gain|saving|reduction|delta|uplift|rate)", 0.08, 0.02),
     (r"", 0.05, 0.0),
 ]
 
@@ -101,6 +106,42 @@ def compare_rows(baseline: dict, candidate: dict) -> list[str]:
     return problems
 
 
+def _gate_key(scenario: str, gate: dict) -> str:
+    return f"{scenario}:{gate['metric']}"
+
+
+def compare_degradation(baseline: dict, candidate: dict) -> list[str]:
+    """Graceful-degradation gate (DESIGN.md §10): any false ``ok`` flag in
+    the candidate's ``degradation`` block fails the comparison like a
+    tolerance breach, and every gate present in the committed baseline must
+    still exist in the candidate (a family cannot silently stop gating an
+    invariant)."""
+    problems = []
+    cand = candidate.get("degradation")
+    base = baseline.get("degradation")
+    if cand is not None:
+        for name, sc in cand["scenarios"].items():
+            for g in sc["gates"]:
+                if not g["ok"]:
+                    problems.append(
+                        f"INVARIANT {name}: {g['metric']} = {g['value']} "
+                        f"violates {g['metric']} {g['op']} {g['bound']}")
+    if base is not None:
+        if cand is None:
+            problems.append(
+                "MISSING  degradation block: in baseline, not in candidate")
+            return problems
+        have = {_gate_key(n, g) for n, sc in cand["scenarios"].items()
+                for g in sc["gates"]}
+        for name, sc in base["scenarios"].items():
+            for g in sc["gates"]:
+                if _gate_key(name, g) not in have:
+                    problems.append(
+                        f"MISSING  degradation gate {name}:{g['metric']}: "
+                        f"in baseline, not in candidate")
+    return problems
+
+
 def compare_files(baseline_path: str, candidate_path: str,
                   candidate_payload: dict | None = None) -> list[str]:
     """``candidate_payload`` lets callers that already loaded the
@@ -121,7 +162,8 @@ def compare_files(baseline_path: str, candidate_path: str,
             and baseline["backend"] != candidate["backend"]):
         return [f"MISMATCH backend: baseline={baseline['backend']!r} "
                 f"candidate={candidate['backend']!r}"]
-    return compare_rows(baseline, candidate)
+    return (compare_rows(baseline, candidate)
+            + compare_degradation(baseline, candidate))
 
 
 def resolve_baseline(baselines_dir: str, candidate_path: str,

@@ -12,11 +12,18 @@ is the entry point the nightly CI matrix job runs at full scale.
     PYTHONPATH=src python benchmarks/run.py --tiny          # smoke scale
     PYTHONPATH=src python benchmarks/run.py --family chain --out-dir out/
     PYTHONPATH=src python benchmarks/run.py --analytic      # + model figures
+    PYTHONPATH=src python benchmarks/run.py --tiny --oracle \
+        --family adversarial                                # fault oracle
 
 ``--analytic`` additionally renders the analytic per-figure rows
 (figures.ALL_FIGURES — model curves, no stateful sweep) the seed driver
 printed; the curated assertion benches (bench_pipeline / bench_hostmodel /
-bench_chain) remain the CI gates.
+bench_chain / bench_adversarial) remain the CI gates.  ``--oracle``
+re-checks every executed point engine ≡ host loop (counters + telemetry +
+NF counters) — with each spec's fault event mirrored into the loop, which
+is how CI's fast job proves the invariant *through* fault injection on the
+adversarial family.  The adversarial family's artifact additionally
+carries the DESIGN.md §10 ``degradation`` block compare.py enforces.
 """
 from __future__ import annotations
 
@@ -37,6 +44,9 @@ def main() -> None:
     ap.add_argument("--analytic", action="store_true",
                     help="also render the analytic model figures "
                          "(figures.ALL_FIGURES)")
+    ap.add_argument("--oracle", action="store_true",
+                    help="assert engine==loop (counters+telemetry+NF "
+                         "counters) at every matrix point, faults included")
     args = ap.parse_args()
 
     import repro.scenarios as S
@@ -59,13 +69,19 @@ def main() -> None:
         rows = []
         for r in results:
             rows.extend(S.default_rows(r, fam))
-        print(f"# {fam}: {len(specs)} scenarios, "
+            if args.oracle:
+                S.verify_oracle(r)  # raises OracleMismatch on divergence
+        degradation = (S.degradation_block(results)
+                       if fam == "adversarial" else None)
+        oracle = " oracle ok," if args.oracle else ""
+        print(f"# {fam}: {len(specs)} scenarios,{oracle} "
               f"{time.time() - t0:.1f}s", file=sys.stderr)
         if args.out_dir:
             os.makedirs(args.out_dir, exist_ok=True)
             write_bench_json(
                 os.path.join(args.out_dir, f"BENCH_{fam}.json"), fam, rows,
-                matrix={s.name: s.as_dict() for s in specs})
+                matrix={s.name: s.as_dict() for s in specs},
+                degradation=degradation)
         all_rows.extend(rows)
 
     if args.analytic:

@@ -7,7 +7,9 @@ occupied-slot Split skips.  We add a ninth (CRC failures on Merge-side header
 validation, §3.2) which the paper mentions but does not enumerate, and two
 for the recirculation path (§6.2.5, DESIGN.md §6): packets that took a
 second pipeline pass, and recirculation candidates denied by the
-recirculation-port bandwidth budget (they fall back to plain forwarding).
+recirculation-port bandwidth budget (they fall back to plain forwarding) —
+plus one for the fault-injection layer (DESIGN.md §10): packets lost at an
+NF server that was down when the switch forwarded them.
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ NAMES = (
     "crc_failures",        # Merge-side tag CRC validation failures
     "recirculations",      # packets that took a recirculation pass (§6.2.5)
     "recirc_budget_drops", # recirc candidates denied by the port budget
+    "fault_drops",         # packets sent to a down NF server (DESIGN.md §10)
 )
 IDX = {n: i for i, n in enumerate(NAMES)}
 NUM = len(NAMES)

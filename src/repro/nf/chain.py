@@ -27,21 +27,39 @@ class Chain:
     def init_state(self) -> tuple:
         return tuple(nf.init_state() for nf in self.nfs)
 
-    def run(self, states: tuple, pkts: PacketBatch, backend=None):
+    def run(self, states: tuple, pkts: PacketBatch, backend=None, ctx=None):
         """Returns (new_states, pkts_out, dropped_by_chain, total_cycles).
 
         ``backend`` (``repro.backend.BackendConfig`` / name / None) selects
         each NF's hot-path primitive implementation and is threaded to every
-        NF uniformly."""
+        NF uniformly.  ``ctx`` is the per-step environment dict from the
+        fault-injection layer (DESIGN.md §10) — currently ``{"lb_up": bool
+        scalar}`` — threaded to every NF the same way; None means healthy."""
         dropped = jnp.zeros_like(pkts.alive)
         total_cycles = 0.0
         new_states = []
         for nf, st in zip(self.nfs, states):
-            st, pkts, drop, cycles = nf(st, pkts, backend=backend)
+            st, pkts, drop, cycles = nf(st, pkts, backend=backend, ctx=ctx)
             dropped = dropped | drop
             total_cycles += cycles
             new_states.append(st)
         return tuple(new_states), pkts, dropped, total_cycles
+
+    def state_counters(self, states: tuple) -> dict:
+        """Aggregate the NF-private counters carried in chain state (e.g.
+        NAT's ``nat_stale_hits``), as a flat name->scalar dict.  NFs opt in
+        by defining ``state_counters(state)``; names must be unique across
+        the chain (each NF prefixes its own)."""
+        out: dict = {}
+        for nf, st in zip(self.nfs, states):
+            fn = getattr(nf, "state_counters", None)
+            if fn is None:
+                continue
+            for name, val in fn(st).items():
+                if name in out:
+                    raise ValueError(f"duplicate NF counter {name!r}")
+                out[name] = val
+        return out
 
     def cycle_costs(self, backend=None) -> tuple[float, ...]:
         """Per-NF CPU cycle costs, in chain order, for the analytic model

@@ -35,7 +35,7 @@ class Firewall:
     def init_state(self):
         return jnp.asarray(list(self.rules), jnp.int32).reshape(-1)
 
-    def __call__(self, state, pkts: PacketBatch, backend=None):
+    def __call__(self, state, pkts: PacketBatch, backend=None, ctx=None):
         rules = state  # (R,) int32
         # Linear probe: compare every packet against every rule.
         blocked = dispatch("acl_match", backend)(pkts.src_ip, rules)

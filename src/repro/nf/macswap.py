@@ -25,7 +25,7 @@ class MacSwap:
     def init_state(self):
         return ()
 
-    def __call__(self, state, pkts: PacketBatch, backend=None):
+    def __call__(self, state, pkts: PacketBatch, backend=None, ctx=None):
         out = pkts.replace(
             dst_mac=jnp.where(pkts.alive, pkts.src_mac, pkts.dst_mac),
             src_mac=jnp.where(pkts.alive, pkts.dst_mac, pkts.src_mac),

@@ -58,21 +58,56 @@ def build_table(backends: tuple[int, ...], table_size: int) -> np.ndarray:
     return entry
 
 
+def degraded_table(backends: tuple[int, ...], table_size: int,
+                   dead: int) -> np.ndarray:
+    """Lookup table with backend index ``dead`` removed, entries remapped
+    to the *original* backend indexing.
+
+    This is what a Maglev control plane pushes when a health check fails:
+    the surviving backends re-run the population over the same table size,
+    so the dead backend's slots are redistributed while the vast majority
+    of surviving slots keep their assignment (the consistent-hashing
+    minimal-disruption property ``tests/test_chain_lb.py`` asserts).
+    """
+    surviving = tuple(b for i, b in enumerate(backends) if i != dead)
+    orig_idx = np.array([i for i in range(len(backends)) if i != dead],
+                        np.int32)
+    return orig_idx[build_table(surviving, table_size)]
+
+
 @dataclasses.dataclass(frozen=True)
 class MaglevLB:
     backends: tuple[int, ...] = tuple(0x0A000100 + i for i in range(8))
     table_size: int = 251  # small prime; Maglev paper uses 65537 in prod
+    # Fault-injection hook (DESIGN.md §10): when >= 0, state additionally
+    # carries the degraded table with this backend removed, and the per-step
+    # ``ctx["lb_up"]`` mask selects live vs degraded — the kill->recover
+    # round trip is pure data flow, no recompile at the fault boundary.
+    fault_target: int = -1
+
+    def __post_init__(self):
+        if self.fault_target >= len(self.backends):
+            raise ValueError(
+                f"fault_target {self.fault_target} out of range for "
+                f"{len(self.backends)} backends")
 
     def init_state(self):
-        return dict(
+        state = dict(
             table=jnp.asarray(build_table(self.backends, self.table_size)),
             backend_ips=jnp.asarray(list(self.backends), jnp.int32),
         )
+        if self.fault_target >= 0:
+            state["table_down"] = jnp.asarray(degraded_table(
+                self.backends, self.table_size, self.fault_target))
+        return state
 
-    def __call__(self, state, pkts: PacketBatch, backend=None):
+    def __call__(self, state, pkts: PacketBatch, backend=None, ctx=None):
+        table = state["table"]
+        if self.fault_target >= 0 and ctx is not None and "lb_up" in ctx:
+            table = jnp.where(ctx["lb_up"], table, state["table_down"])
         new_dst = dispatch("maglev_select", backend)(
             pkts.src_ip, pkts.dst_ip, pkts.src_port, pkts.dst_port,
-            pkts.proto, state["table"], state["backend_ips"])
+            pkts.proto, table, state["backend_ips"])
         out = pkts.replace(
             dst_ip=jnp.where(pkts.alive, new_dst, pkts.dst_ip))
         drop = jnp.zeros_like(pkts.alive)

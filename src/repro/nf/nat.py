@@ -19,6 +19,16 @@ turns the seed's *permanent* drops (which skewed ≥16k-flow single-pipe
 goodput traces; see ``benchmarks/bench_pipeline``) into transient drops
 while a neighbourhood ages out.
 
+CLOCK-aging stale-mapping rule: when a flow returns *after* its slot aged
+out (exp==0, keys still in place), the slot's port is no longer owned by
+the flow — CLOCK may already have re-issued it to a newcomer, so silently
+refreshing the old binding would translate two flows onto one external
+port.  Such packets are counted ``nat_stale_hits`` and dropped, and the
+dead binding is torn down so the flow's next packet re-binds cleanly
+(possibly to a different port — exactly what a real NAT's expired-mapping
+path does).  The counter rides the chain's ``state_counters`` channel into
+engine results and the engine≡loop oracle.
+
 Rewrites ``src_ip -> nat_ip`` and ``src_port`` to the mapped external port.
 Header-only: payload is never touched.
 
@@ -77,11 +87,16 @@ class Nat:
             key_ip=jnp.full((self.capacity,), -1, jnp.int32),
             key_port=jnp.full((self.capacity,), -1, jnp.int32),
             exp=jnp.zeros((self.capacity,), jnp.int32),  # 0 = free slot
+            stale_hits=jnp.zeros((), jnp.int32),
         )
 
-    def __call__(self, state, pkts: PacketBatch, backend=None):
+    def state_counters(self, state) -> dict:
+        """NF-private counters surfaced through Chain.state_counters."""
+        return {"nat_stale_hits": state["stale_hits"]}
+
+    def __call__(self, state, pkts: PacketBatch, backend=None, ctx=None):
         # header-only table logic; no registry primitive applies, but the
-        # chain threads ``backend`` uniformly through every NF
+        # chain threads ``backend``/``ctx`` uniformly through every NF
         cap = self.capacity
 
         def step(carry, x):
@@ -90,17 +105,28 @@ class Nat:
             h = _hash(ip, port, cap)
             slot = jnp.int32(-1)
             free = jnp.int32(-1)
+            stale = jnp.int32(-1)
             for i in range(PROBE_DEPTH):
                 idx = (h + i) % cap
                 live_i = exp[idx] > 0
-                hit_i = live_i & (key_ip[idx] == ip) & (key_port[idx] == port)
-                slot = jnp.where((slot < 0) & hit_i, idx, slot)
+                match_i = (key_ip[idx] == ip) & (key_port[idx] == port)
+                slot = jnp.where((slot < 0) & live_i & match_i, idx, slot)
+                stale = jnp.where((stale < 0) & ~live_i & match_i, idx, stale)
                 free = jnp.where((free < 0) & ~live_i, idx, free)
             hit = alive & (slot >= 0)
-            can_insert = alive & (slot < 0) & (free >= 0)
+            # The flow's mapping aged out (CLOCK) while packets were still
+            # in flight: the slot's port may already be re-issued, so the
+            # old binding must NOT silently translate.  Count, drop, and
+            # tear the dead binding down so the next packet re-binds.
+            stale_hit = alive & (slot < 0) & (stale >= 0)
+            can_insert = alive & (slot < 0) & ~stale_hit & (free >= 0)
             idx = jnp.where(hit, slot, jnp.where(free >= 0, free, 0))
             key_ip = jnp.where(can_insert, key_ip.at[idx].set(ip), key_ip)
             key_port = jnp.where(can_insert, key_port.at[idx].set(port),
+                                 key_port)
+            sidx = jnp.clip(stale, 0, cap - 1)
+            key_ip = jnp.where(stale_hit, key_ip.at[sidx].set(-1), key_ip)
+            key_port = jnp.where(stale_hit, key_port.at[sidx].set(-1),
                                  key_port)
             # use refreshes the expiry (core.park's EXP discipline)
             exp = jnp.where(hit | can_insert,
@@ -114,20 +140,23 @@ class Nat:
             probed = (h + jnp.arange(PROBE_DEPTH)) % cap
             aged = jnp.maximum(exp.at[probed].add(-1), 0)
             exp = jnp.where(exhausted, aged, exp)
-            return (key_ip, key_port, exp), mapped
+            return (key_ip, key_port, exp), (mapped, stale_hit)
 
         carry0 = (state["key_ip"], state["key_port"], state["exp"])
-        (key_ip, key_port, exp), mapped = jax.lax.scan(
+        (key_ip, key_port, exp), (mapped, stale_hit) = jax.lax.scan(
             step, carry0, (pkts.src_ip, pkts.src_port, pkts.alive)
         )
         ok = pkts.alive & (mapped >= 0)
-        # Table exhausted in this probe window: drop (a real NAT would too,
-        # until expiry reclaims a port).
+        # Table exhausted in this probe window, or a stale binding: drop (a
+        # real NAT would too, until expiry/re-binding restores a port).
         drop = pkts.alive & (mapped < 0)
         out = pkts.replace(
             src_ip=jnp.where(ok, self.nat_ip, pkts.src_ip),
             src_port=jnp.where(ok, mapped, pkts.src_port),
             alive=pkts.alive & ~drop,
         )
-        new_state = dict(key_ip=key_ip, key_port=key_port, exp=exp)
+        new_state = dict(
+            key_ip=key_ip, key_port=key_port, exp=exp,
+            stale_hits=state["stale_hits"] + jnp.sum(
+                stale_hit.astype(jnp.int32)))
         return new_state, out, drop, CYCLES

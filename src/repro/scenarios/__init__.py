@@ -5,6 +5,9 @@ Declarative scenario specs (``spec``), a registry of named families
 and the vmapped sweep runner (``runner``) that executes trace-compatible
 points as one compiled XLA program.
 """
+from repro.scenarios.adversarial import (adversarial_family, bounds_for,
+                                         degradation_block,
+                                         degradation_metrics)
 from repro.scenarios.matrix import pipeline_grid, recirc_grid
 from repro.scenarios.registry import family, names, register
 from repro.scenarios.runner import (OracleMismatch, ScenarioResult,
@@ -19,4 +22,6 @@ __all__ = [
     "verify_oracle",
     "ScenarioSpec", "build_chain", "compile_key", "grid", "make_packets",
     "resolve_workload", "steer",
+    "adversarial_family", "bounds_for", "degradation_block",
+    "degradation_metrics",
 ]

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.scenarios.spec import (ScenarioSpec, build_chain, compile_key,
                                   make_packets, steer)
 from repro.switchsim import engine as E
+from repro.switchsim import faults as F
 from repro.switchsim.simulate import simulate_loop
 from repro.switchsim.telemetry import LinkTelemetry, sum_telemetry
 from repro.core import counters as C
@@ -51,6 +52,9 @@ class ScenarioResult:
     per_pipe_counters: list[dict]
     per_pipe_telemetry: list[LinkTelemetry]
     per_pipe_peak_occupancy: list[int]
+    nf_counters: dict
+    per_pipe_nf_counters: list[dict]
+    per_pipe_occ_series: object   # (P, steps) parked-slot occupancy
     gain: dict
     steer_stats: dict
     nf_cycles: tuple[float, ...]
@@ -80,13 +84,16 @@ class _Prepared:
     traces: object
     steer_stats: dict
     n_pipes: int
+    faults: F.FaultArrays = None  # per-pipe masks over the steered steps
 
 
 def _prepare(spec: ScenarioSpec) -> _Prepared:
     pkts = make_packets(spec)
     chain = build_chain(spec, pkts)
     traces, stats = steer(spec, pkts)
-    return _Prepared(spec, pkts, chain, traces, stats, spec.pipes)
+    steps = jax.tree.leaves(traces)[0].shape[1]
+    fa = F.resolve(spec.fault, pipes=spec.pipes, steps=steps)
+    return _Prepared(spec, pkts, chain, traces, stats, spec.pipes, fa)
 
 
 def _cat_pipe_axis(traces_list):
@@ -117,12 +124,17 @@ def run_matrix(specs, time_runs: bool = False,
         (cfg, chain, window, _chunk, _steps, _pmax, explicit_drops,
          _lane, backend) = key
         stacked = _cat_pipe_axis([prepared[i].traces for i in members])
+        # fault masks ride the same stacked pipe axis as the traces —
+        # healthy members contribute all-True columns, so one compiled
+        # program serves faulted and healthy points alike (DESIGN.md §10)
+        stacked_faults = F.concat([prepared[i].faults for i in members])
 
         def run(cfg=cfg, chain=chain, stacked=stacked, window=window,
-                explicit_drops=explicit_drops, backend=backend):
+                explicit_drops=explicit_drops, backend=backend,
+                stacked_faults=stacked_faults):
             return E.run_pipes(cfg, chain, stacked, window=window,
                                explicit_drops=explicit_drops,
-                               backend=backend)
+                               backend=backend, faults=stacked_faults)
 
         res = run()
         if time_runs:
@@ -141,8 +153,11 @@ def run_matrix(specs, time_runs: bool = False,
             offset = hi
             per_ctr = res.per_pipe_counters[lo:hi]
             per_tel = res.per_pipe_telemetry[lo:hi]
+            per_nf = res.per_pipe_nf_counters[lo:hi]
             tel = sum_telemetry(per_tel)
             agg = {name: sum(c[name] for c in per_ctr) for name in C.NAMES}
+            nf_agg = {name: sum(c[name] for c in per_nf)
+                      for name in (per_nf[0] if per_nf else {})}
             results[i] = ScenarioResult(
                 spec=p.spec,
                 counters=agg,
@@ -150,6 +165,9 @@ def run_matrix(specs, time_runs: bool = False,
                 per_pipe_counters=per_ctr,
                 per_pipe_telemetry=per_tel,
                 per_pipe_peak_occupancy=res.per_pipe_peak_occupancy[lo:hi],
+                nf_counters=nf_agg,
+                per_pipe_nf_counters=per_nf,
+                per_pipe_occ_series=res.per_pipe_occ_series[lo:hi],
                 gain=E.goodput_gain_from_telemetry(tel),
                 steer_stats=p.steer_stats,
                 nf_cycles=chain.cycle_costs(backend=backend),
@@ -166,14 +184,20 @@ class OracleMismatch(AssertionError):
     """Engine diverged from the host-loop reference on a scenario point."""
 
 
-def verify_oracle(result: ScenarioResult) -> None:
-    """Assert engine ≡ host loop (counters + telemetry) for one point.
+def verify_oracle(result: ScenarioResult, faults=True) -> None:
+    """Assert engine ≡ host loop (counters + telemetry + NF counters) for
+    one point.
 
     Re-runs ``simulate_loop`` per pipe on the pipe's flat trace (dead
     padding rows are no-ops for the loop exactly as for the engine), on
     the point's own backend (the loop dispatches the same primitives), and
     compares against the engine's per-pipe counters and telemetry.
     Raises ``OracleMismatch`` on any difference.
+
+    ``faults`` controls whether the spec's fault event is mirrored into
+    the loop (the default; the engine≡loop invariant must hold *through*
+    fault events).  Pass ``faults=False`` to re-run the loop healthy —
+    useful only for demonstrating that a fault actually changed behaviour.
     """
     spec = result.spec
     # reuse the traffic/chain/traces the result was computed from; a
@@ -187,7 +211,9 @@ def verify_oracle(result: ScenarioResult) -> None:
         loop = simulate_loop(cfg, p.chain, flat, window=spec.window,
                              chunk=spec.chunk,
                              explicit_drops=spec.explicit_drops,
-                             backend=spec.backend_config())
+                             backend=spec.backend_config(),
+                             faults=spec.fault if faults else None,
+                             fault_pipe=pipe)
         if loop.counters != result.per_pipe_counters[pipe]:
             raise OracleMismatch(
                 f"{spec.name} pipe {pipe}: counters diverged\n"
@@ -198,6 +224,11 @@ def verify_oracle(result: ScenarioResult) -> None:
                 f"{spec.name} pipe {pipe}: telemetry diverged\n"
                 f"  engine: {result.per_pipe_telemetry[pipe]}\n"
                 f"  loop:   {loop.telemetry}")
+        if loop.nf_counters != result.per_pipe_nf_counters[pipe]:
+            raise OracleMismatch(
+                f"{spec.name} pipe {pipe}: NF counters diverged\n"
+                f"  engine: {result.per_pipe_nf_counters[pipe]}\n"
+                f"  loop:   {loop.nf_counters}")
 
 
 def default_rows(result: ScenarioResult, family: str) -> list[tuple]:

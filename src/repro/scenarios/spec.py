@@ -31,9 +31,13 @@ from repro.nf.firewall import Firewall
 from repro.nf.macswap import MacSwap
 from repro.nf.maglev import MaglevLB
 from repro.nf.nat import Nat
+from repro.switchsim.faults import NO_FAULT, FaultSpec
 from repro.traffic import generator as T
 
-WorkloadSpec = tuple  # ("fixed", size) | ("enterprise",) | ("datacenter",)
+# ("fixed", size) | ("enterprise",) | ("datacenter",)
+# | ("adversarial", base, attack_fraction, burst)   (DESIGN.md §10)
+# | ("churn", pool, rotate)
+WorkloadSpec = tuple
 ChainSpec = tuple     # e.g. ("fw", "nat", "lb"); names below
 
 
@@ -50,6 +54,12 @@ class ScenarioSpec:
     (``repro.backend``: "ref" | "pallas" | "pallas_interpret" | "auto") —
     a first-class grid axis, so ref-vs-Pallas sweeps ride the same runner
     as every other comparison (DESIGN.md §9).
+
+    ``fault`` injects one fault event (``switchsim.faults.FaultSpec``,
+    DESIGN.md §10); fault *timing* is data, so faulted and healthy points
+    still share a compile group.  ``nat_capacity`` overrides the NAT
+    flow-table size (0 = the NF's default) — the churn family shrinks it
+    below the live flow window to sustain CLOCK aging.
     """
 
     name: str
@@ -69,6 +79,8 @@ class ScenarioSpec:
     flows: int = 0
     fw_rules: int = 20
     backend: str = "auto"
+    fault: FaultSpec = NO_FAULT
+    nat_capacity: int = 0
 
     def __post_init__(self):
         as_config(self.backend)  # validates the backend name eagerly
@@ -88,6 +100,28 @@ class ScenarioSpec:
                 f"{self.name}: fw_rules ({self.fw_rules}) must be < flows "
                 f"({self.flows}) — blocking the whole pool drops 100% of "
                 f"the traffic")
+        if self.flows and self.workload[0] in ("adversarial", "churn"):
+            raise ValueError(
+                f"{self.name}: workload {self.workload[0]!r} owns the "
+                f"source identity (spoofed/churning flows); flows must be 0")
+        if self.nat_capacity and "nat" not in self.chain:
+            raise ValueError(
+                f"{self.name}: nat_capacity set but no 'nat' in chain")
+        f = self.fault
+        if f.active:
+            steps = T.pipe_trace_steps(self.packets, self.pipes, self.chunk)
+            if f.end > steps:
+                raise ValueError(
+                    f"{self.name}: fault window [{f.start}, {f.end}) "
+                    f"exceeds the {steps}-step per-pipe trace — faults "
+                    f"must live within the offered traffic")
+            if f.kind == "server" and f.pipe >= self.pipes:
+                raise ValueError(
+                    f"{self.name}: fault pipe {f.pipe} >= pipes "
+                    f"({self.pipes})")
+            if f.kind == "lb" and "lb" not in self.chain:
+                raise ValueError(
+                    f"{self.name}: lb fault but no 'lb' in chain")
 
     def park_config(self) -> ParkConfig:
         return ParkConfig(capacity=self.capacity, max_exp=self.max_exp,
@@ -116,6 +150,11 @@ def resolve_workload(ws: WorkloadSpec) -> T.Workload:
         return T.enterprise()
     if kind == "datacenter":
         return T.datacenter()
+    if kind == "adversarial":
+        return T.adversarial(base=ws[1], attack_fraction=float(ws[2]),
+                             burst=int(ws[3]))
+    if kind == "churn":
+        return T.churn(pool=int(ws[1]), rotate=int(ws[2]))
     raise ValueError(f"unknown workload spec {ws!r}")
 
 
@@ -162,9 +201,11 @@ def build_chain(spec: ScenarioSpec, pkts: PacketBatch) -> Chain:
         if nf == "fw":
             nfs.append(Firewall(rules=firewall_rules(spec, pkts)))
         elif nf == "nat":
-            nfs.append(Nat())
+            nfs.append(Nat(capacity=spec.nat_capacity) if spec.nat_capacity
+                       else Nat())
         elif nf == "lb":
-            nfs.append(MaglevLB())
+            nfs.append(MaglevLB(fault_target=spec.fault.backend
+                                if spec.fault.kind == "lb" else -1))
         elif nf == "macswap":
             nfs.append(MacSwap())
     return Chain(tuple(nfs))

@@ -58,6 +58,7 @@ from repro.core.packet import PacketBatch, gather_rows
 from repro.core.park import (ParkConfig, ParkState, init_state, merge_fn,
                              occupancy, recirc_fn, split_fn)
 from repro.nf.chain import Chain, to_explicit_drops
+from repro.switchsim import faults as F
 from repro.switchsim.telemetry import (TEL_FIELDS, LinkTelemetry,
                                        sum_telemetry)
 
@@ -83,6 +84,10 @@ class EngineResult:
     ``telemetry``: exact per-link byte/packet totals (wire in, switch->server,
     server->switch, recirculation port, merged out — DESIGN.md §7); the byte
     fields above are derived views kept for compatibility.
+    ``occ_series``: (T+pad,) live parked slots after each step's Merge —
+    the time series the fault-injection recovery gates read (DESIGN.md §10).
+    ``nf_counters``: NF-private counters from the final chain state (e.g.
+    NAT ``nat_stale_hits``), via ``Chain.state_counters``.
     """
 
     merged: PacketBatch
@@ -95,6 +100,8 @@ class EngineResult:
     ret_bytes: int
     peak_occupancy: int
     telemetry: LinkTelemetry
+    occ_series: np.ndarray = None
+    nf_counters: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -117,6 +124,10 @@ class PipesResult(EngineResult):
     # and needs the per-pipe maxima, not only the cross-pipe max
     per_pipe_peak_occupancy: list[int] = dataclasses.field(
         default_factory=list)
+    # (P, T+pad) per-pipe occupancy series: server faults hit one pipe, so
+    # the recovery gate needs the victim pipe's series, not the aggregate
+    per_pipe_occ_series: np.ndarray = None
+    per_pipe_nf_counters: list[dict] = dataclasses.field(default_factory=list)
 
 
 def _alive_bytes(p: PacketBatch) -> jax.Array:
@@ -184,9 +195,16 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
     """Single-pipe scan body: trace (T+pad, chunk, ...) -> ys + final.
 
     ``recirc`` is the recirculation-lane width (0 = lane off; the step body
-    is then exactly the seed timeline, keeping the bit-exactness oracle)."""
+    is then exactly the seed timeline, keeping the bit-exactness oracle).
 
-    def run(trace: PacketBatch):
+    Fault injection (DESIGN.md §10) rides the scan as extra xs — per-step
+    ``server_up``/``lb_up`` bools — plus a traced ``drain`` scalar.  With
+    all-True masks every fault operation is a bit-exact no-op, so the SAME
+    compiled program serves healthy and faulted runs; fault timing is data.
+    """
+
+    def run(trace: PacketBatch, server_up: jax.Array, lb_up: jax.Array,
+            drain: jax.Array):
         # All-dead chunks are all-zeros in every field (alive=False == 0),
         # so a zeros ring is a ring of dead chunks.  With a recirculation
         # lane the NF-bound chunks are ``recirc`` rows wider.
@@ -200,8 +218,9 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
         carry0 = (init_state(cfg), chain.init_state(), ring, lane0,
                   jnp.zeros((), jnp.int32))
 
-        def step(carry, cin):
+        def step(carry, xs):
             state, cstates, ring, lane, t = carry
+            cin, s_up, l_up = xs
             wire_b = _alive_bytes(cin)
             wire_p = _alive_pkts(cin)
             if recirc:
@@ -220,10 +239,28 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
             else:
                 rec_b = rec_p = jnp.zeros((), jnp.int32)
                 nf_in = out
+            # to_server telemetry is tallied on nf_in BEFORE the kill: the
+            # switch still transmits to a dead server (the link is up, the
+            # host is not), so the forward link carries the bytes either way
+            to_srv_p, to_srv_b = _alive_pkts(nf_in), _alive_bytes(nf_in)
+            # Server fault (DESIGN.md §10): packets forwarded while this
+            # pipe's server is down are lost at send time.  The chain still
+            # runs on the step (dead rows are no-ops on NF state — a down
+            # server processes nothing).
+            killed = nf_in.alive & ~s_up
+            state = dataclasses.replace(
+                state, counters=C.bump(state.counters, "fault_drops",
+                                       jnp.sum(killed)))
+            srv_in = nf_in.replace(alive=nf_in.alive & s_up)
             cstates, nf_out, dropped, _cycles = chain.run(
-                cstates, nf_in, backend=backend)
+                cstates, srv_in, backend=backend, ctx={"lb_up": l_up})
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
+            # Drain-vs-drop rule: with drain, the failover agent turns each
+            # killed packet's parked payload into an OP=drop notification on
+            # the return path (the §6.2.4 machinery frees the slot at
+            # Merge); without it the slots leak until expiry-based eviction.
+            nf_out = to_explicit_drops(nf_out, killed & drain)
             if window == 0:
                 returning = nf_out
             else:
@@ -240,8 +277,8 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
             ys = dict(
                 merged=m, occ=occupancy(state),
                 wire_pkts=wire_p, wire_bytes=wire_b,
-                to_server_pkts=_alive_pkts(nf_in),
-                to_server_bytes=_alive_bytes(nf_in),
+                to_server_pkts=to_srv_p,
+                to_server_bytes=to_srv_b,
                 from_server_pkts=_alive_pkts(returning),
                 from_server_bytes=_alive_bytes(returning),
                 recirc_pkts=rec_p, recirc_bytes=rec_b,
@@ -251,8 +288,9 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
                 ys["sent"] = nf_in
             return (state, cstates, ring, lane, t + 1), ys
 
-        (state, _, _, _, _), ys = jax.lax.scan(step, carry0, trace)
-        return state, ys
+        (state, cstates, _, _, _), ys = jax.lax.scan(
+            step, carry0, (trace, server_up, lb_up))
+        return state, cstates, ys
 
     return run
 
@@ -320,6 +358,19 @@ def _finalize(ys: dict, window: int, collect_sent: bool, time_axis: int):
     return merged, sent, int(occ)
 
 
+def _pad_masks(fa: F.FaultArrays, pad: int):
+    """Extend the fault masks with all-True columns over the drain/warm-up
+    padding steps — faults live within the offered trace (faults.py)."""
+    ones = np.ones((fa.pipes, pad), bool)
+    return (jnp.asarray(np.concatenate([fa.server_up, ones], axis=1)),
+            jnp.asarray(np.concatenate([fa.lb_up, ones], axis=1)),
+            jnp.asarray(fa.drain))
+
+
+def _nf_counters(chain: Chain, cstates) -> dict[str, int]:
+    return {k: int(v) for k, v in chain.state_counters(cstates).items()}
+
+
 def run_engine(
     cfg: ParkConfig,
     chain: Chain,
@@ -329,6 +380,7 @@ def run_engine(
     backend=None,
     use_kernel: bool | None = None,
     collect_sent: bool = False,
+    faults=None,
 ) -> EngineResult:
     """Run one pipe over a time-major trace (T, chunk, ...) under one jit.
 
@@ -339,15 +391,21 @@ def run_engine(
     leading lane rows.  ``backend`` selects the hot-path primitive
     implementations (``repro.backend``, DESIGN.md §9) for Split/Merge,
     header validation and the NF chain alike; ``use_kernel`` is the
-    deprecated alias (True -> "pallas_interpret").
+    deprecated alias (True -> "pallas_interpret").  ``faults`` is a
+    ``switchsim.faults.FaultSpec`` (or pre-lowered ``FaultArrays``);
+    None/NO_FAULT runs healthy through the same compiled program.
     """
     backend = coerce_backend(backend, use_kernel)
     chunk = jax.tree.leaves(trace)[0].shape[1]
+    steps = jax.tree.leaves(trace)[0].shape[0]
     lane = recirc_slots(cfg, chunk)
-    trace = _pad_trace(trace, window + (1 if lane else 0), axis=0)
+    pad = window + (1 if lane else 0)
+    fa = F.resolve(faults, pipes=1, steps=steps)
+    s_up, l_up, drain = _pad_masks(fa, pad)
+    trace = _pad_trace(trace, pad, axis=0)
     fn = _compiled(cfg, chain, window, explicit_drops, backend,
                    collect_sent, pipes=False, recirc=lane)
-    state, ys = fn(trace)
+    state, cstates, ys = fn(trace, s_up[0], l_up[0], drain[0])
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=0)
     tel = _sum_telemetry(ys)
     return EngineResult(
@@ -356,6 +414,8 @@ def run_engine(
         srv_bytes=tel.srv_bytes, srv_fwd_bytes=tel.to_server_bytes,
         wire_bytes=tel.wire_bytes, ret_bytes=tel.merged_bytes,
         peak_occupancy=occ, telemetry=tel,
+        occ_series=np.asarray(ys["occ"], np.int64),
+        nf_counters=_nf_counters(chain, cstates),
     )
 
 
@@ -368,22 +428,29 @@ def run_pipes(
     backend=None,
     use_kernel: bool | None = None,
     collect_sent: bool = False,
+    faults=None,
 ) -> PipesResult:
     """Run P independent pipes over (P, T, chunk, ...) traces, vmapped.
 
     Each pipe owns a fresh ``ParkState`` and NF-chain state (the paper's
     per-port pipes share nothing, §6.3.2); one compiled program drives all
     of them.  Byte totals and counters are aggregated across pipes.
-    ``backend``/``use_kernel`` behave exactly as in ``run_engine``.
+    ``backend``/``use_kernel``/``faults`` behave exactly as in
+    ``run_engine`` (``FaultArrays`` here may carry per-pipe masks stacked
+    by the scenario runner across batched scenario points).
     """
     backend = coerce_backend(backend, use_kernel)
     n_pipes = jax.tree.leaves(traces)[0].shape[0]
     chunk = jax.tree.leaves(traces)[0].shape[2]
+    steps = jax.tree.leaves(traces)[0].shape[1]
     lane = recirc_slots(cfg, chunk)
-    traces = _pad_trace(traces, window + (1 if lane else 0), axis=1)
+    pad = window + (1 if lane else 0)
+    fa = F.resolve(faults, pipes=n_pipes, steps=steps)
+    s_up, l_up, drain = _pad_masks(fa, pad)
+    traces = _pad_trace(traces, pad, axis=1)
     fn = _compiled(cfg, chain, window, explicit_drops, backend,
                    collect_sent, pipes=True, recirc=lane)
-    state, ys = fn(traces)
+    state, cstates, ys = fn(traces, s_up, l_up, drain)
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=1)
     per_tel = _per_pipe_telemetry(ys)
     tel = sum_telemetry(per_tel)
@@ -394,16 +461,23 @@ def run_pipes(
     agg = dict(zip(C.NAMES, (int(v) for v in ctr.sum(axis=0))))
     per_pipe = [dict(zip(C.NAMES, (int(v) for v in ctr[p])))
                 for p in range(n_pipes)]
+    per_nf = [_nf_counters(chain, jax.tree.map(lambda a: a[p], cstates))
+              for p in range(n_pipes)]
+    nf_agg = {k: sum(d[k] for d in per_nf)
+              for k in (per_nf[0] if per_nf else {})}
     return PipesResult(
         merged=merged, sent=sent, state=state,
         counters=agg, srv_bytes=tel.srv_bytes,
         srv_fwd_bytes=tel.to_server_bytes, wire_bytes=tel.wire_bytes,
         ret_bytes=tel.merged_bytes, peak_occupancy=occ, telemetry=tel,
+        occ_series=occ_pp, nf_counters=nf_agg,
         per_pipe_counters=per_pipe,
         per_pipe_srv_bytes=[t.srv_bytes for t in per_tel],
         per_pipe_wire_bytes=[t.wire_bytes for t in per_tel],
         per_pipe_telemetry=per_tel,
         per_pipe_peak_occupancy=per_occ,
+        per_pipe_occ_series=occ_pp,
+        per_pipe_nf_counters=per_nf,
     )
 
 

@@ -39,6 +39,7 @@ from repro.core.park import (ParkConfig, ParkState, init_state, merge, recirc,
                              split)
 from repro.nf.chain import Chain, to_explicit_drops
 from repro.switchsim import engine as engine_mod
+from repro.switchsim import faults as F
 from repro.switchsim.telemetry import TEL_FIELDS, LinkTelemetry
 
 
@@ -52,6 +53,9 @@ class SimResult:
     wire_bytes: int         # total bytes generator->switch
     ret_bytes: int          # bytes the merge stage put back on the wire
     telemetry: LinkTelemetry  # exact per-link byte/packet totals (DESIGN.md §7)
+    # NF-private counters from the final chain state (Chain.state_counters,
+    # e.g. NAT nat_stale_hits) — part of the engine≡loop oracle contract
+    nf_counters: dict = dataclasses.field(default_factory=dict)
 
 def _chunks(pkts: PacketBatch, chunk: int):
     n = pkts.batch_size
@@ -80,6 +84,7 @@ def simulate(
     explicit_drops: bool = False,
     backend=None,
     use_kernel: bool | None = None,
+    faults=None,
 ) -> SimResult:
     """Stream ``pkts`` through split -> NF chain -> merge with ``window``
     chunks in flight.  Returns every merged chunk plus final switch state.
@@ -88,13 +93,14 @@ def simulate(
     program, on-device accounting) and re-materializes the list-of-chunks
     view the seed API exposed.  ``backend`` selects the hot-path primitive
     implementations (``repro.backend``); ``use_kernel`` is the deprecated
-    alias (True -> "pallas_interpret").
+    alias (True -> "pallas_interpret"); ``faults`` a ``faults.FaultSpec``
+    fault event (DESIGN.md §10).
     """
     backend = coerce_backend(backend, use_kernel)
     trace = to_time_major(pkts, chunk)
     res = engine_mod.run_engine(
         cfg, chain, trace, window=window, explicit_drops=explicit_drops,
-        backend=backend, collect_sent=True)
+        backend=backend, collect_sent=True, faults=faults)
     t = res.merged.src_ip.shape[0]  # == trace steps (+1 recirc drain step)
     merged = [jax.tree.map(lambda a: a[i], res.merged) for i in range(t)]
     sent = [jax.tree.map(lambda a: a[i], res.sent) for i in range(t)]
@@ -107,6 +113,7 @@ def simulate(
         wire_bytes=res.wire_bytes,
         ret_bytes=res.ret_bytes,
         telemetry=res.telemetry,
+        nf_counters=res.nf_counters,
     )
 
 
@@ -119,6 +126,8 @@ def simulate_loop(
     explicit_drops: bool = False,
     backend=None,
     use_kernel: bool | None = None,
+    faults=None,
+    fault_pipe: int = 0,
 ) -> SimResult:
     """The seed host-side chunk loop (reference implementation).
 
@@ -129,11 +138,18 @@ def simulate_loop(
     host-side (``_simulate_loop_recirc``) and stays the oracle there too.
     The loop dispatches the SAME per-primitive backend as the engine, so
     the engine≡loop invariant is asserted per backend.
+
+    ``faults`` (``faults.FaultSpec``) mirrors the engine's fault-injection
+    xs host-side (DESIGN.md §10): the loop IS the oracle through fault
+    events too.  ``fault_pipe`` names which pipe of a multi-pipe scenario
+    this single-pipe loop replays (a ``server`` fault only hits its victim
+    pipe's masks).
     """
     backend = coerce_backend(backend, use_kernel)
     if engine_mod.recirc_slots(cfg, chunk) > 0:
         return _simulate_loop_recirc(cfg, chain, pkts, window, chunk,
-                                     explicit_drops, backend)
+                                     explicit_drops, backend, faults,
+                                     fault_pipe)
     state = init_state(cfg)
     chain_states = chain.init_state()
     inflight: list = []
@@ -142,6 +158,7 @@ def simulate_loop(
     tel = dict.fromkeys(TEL_FIELDS, 0)  # recirc_* stay 0: lane off
 
     todo = _chunks(pkts, chunk)
+    s_up, l_up, drain = F.pipe_masks(faults, fault_pipe, len(todo))
     steps = len(todo) + window
     for t in range(steps):
         if t < len(todo):
@@ -154,10 +171,19 @@ def simulate_loop(
             p, b = _alive_stats(out)
             tel["to_server_pkts"] += p
             tel["to_server_bytes"] += b
+            # fault mirror (engine step order): kill at send time, run the
+            # chain on the survivors, then the drain-vs-drop notification
+            killed = out.alive & ~jnp.asarray(s_up[t])
+            state = dataclasses.replace(
+                state, counters=C.bump(state.counters, "fault_drops",
+                                       jnp.sum(killed)))
+            srv_in = out.replace(alive=out.alive & jnp.asarray(s_up[t]))
             chain_states, nf_out, dropped, _cycles = chain.run(
-                chain_states, out, backend=backend)
+                chain_states, srv_in, backend=backend,
+                ctx={"lb_up": jnp.asarray(l_up[t])})
             if explicit_drops:
                 nf_out = to_explicit_drops(nf_out, dropped)
+            nf_out = to_explicit_drops(nf_out, killed & drain)
             inflight.append(nf_out)
         if t >= window and (t - window) < len(inflight):
             returning = inflight[t - window]
@@ -180,21 +206,30 @@ def simulate_loop(
         wire_bytes=telemetry.wire_bytes,
         ret_bytes=telemetry.merged_bytes,
         telemetry=telemetry,
+        nf_counters={k: int(v) for k, v in
+                     chain.state_counters(chain_states).items()},
     )
 
 
 def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
-                          backend):
+                          backend, faults=None, fault_pipe: int = 0):
     """Host-side mirror of the engine's recirculation timeline (DESIGN.md
     §6): same op order (recirc pass, Split, budget admission, NF, ring,
     Merge), same lane width, one drain step — kept as the executable oracle
-    for the scanned engine with recirculation on."""
+    for the scanned engine with recirculation on.  Fault masks are mirrored
+    exactly as in ``simulate_loop`` (padding steps run healthy — but note
+    lane re-injections DO traverse the server link on padding steps, which
+    is why both sides pad the masks rather than skip the kill)."""
     state = init_state(cfg)
     chain_states = chain.init_state()
     lane_w = engine_mod.recirc_slots(cfg, chunk)
     lane = dead_batch(lane_w, cfg.pmax)
     todo = _chunks(pkts, chunk)
     n_real = len(todo)
+    s_up_r, l_up_r, drain = F.pipe_masks(faults, fault_pipe, n_real)
+    pad_ones = np.ones(window + 1, bool)
+    s_up = np.concatenate([s_up_r, pad_ones])
+    l_up = np.concatenate([l_up_r, pad_ones])
     dead_in = dead_batch(chunk, cfg.pmax)
     ring = [dead_batch(chunk + lane_w, cfg.pmax)
             for _ in range(max(window, 1))]
@@ -223,10 +258,17 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
         p, b = _alive_stats(nf_in)
         tel["to_server_pkts"] += p
         tel["to_server_bytes"] += b
+        killed = nf_in.alive & ~jnp.asarray(s_up[t])
+        state = dataclasses.replace(
+            state, counters=C.bump(state.counters, "fault_drops",
+                                   jnp.sum(killed)))
+        srv_in = nf_in.replace(alive=nf_in.alive & jnp.asarray(s_up[t]))
         chain_states, nf_out, dropped, _cycles = chain.run(
-            chain_states, nf_in, backend=backend)
+            chain_states, srv_in, backend=backend,
+            ctx={"lb_up": jnp.asarray(l_up[t])})
         if explicit_drops:
             nf_out = to_explicit_drops(nf_out, dropped)
+        nf_out = to_explicit_drops(nf_out, killed & drain)
         if window == 0:
             returning = nf_out
         else:
@@ -253,6 +295,8 @@ def _simulate_loop_recirc(cfg, chain, pkts, window, chunk, explicit_drops,
         wire_bytes=telemetry.wire_bytes,
         ret_bytes=telemetry.merged_bytes,
         telemetry=telemetry,
+        nf_counters={k: int(v) for k, v in
+                     chain.state_counters(chain_states).items()},
     )
 
 

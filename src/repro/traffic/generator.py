@@ -88,6 +88,141 @@ def fixed(size: int) -> Workload:
                     np.array([1.0]))
 
 
+# --------------------------------------------------------------------------
+# Adversarial & churn workloads (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+# Attack packets spoof the source but converge on one victim service —
+# classic SYN-flood shape, sized just past the parking threshold so every
+# attack packet CLAIMS a table slot while parking almost no useful bytes.
+VICTIM_IP = 0x0A00FFFE
+VICTIM_PORT = 80
+ATTACK_SIZE = 208  # 166 B payload: minimally splittable (>= 160 + HDR 42)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialWorkload(Workload):
+    """Base traffic with a burst-structured small-packet storm overlaid.
+
+    ``attack_fraction`` of the per-batch *burst slots* (contiguous
+    ``burst``-packet runs) are replaced by attack packets: spoofed random
+    sources, one victim destination, ``attack_size`` bytes total — just
+    splittable, so each one claims a parking slot for a 160-byte payload
+    and evicts legitimate large-packet state under pressure.
+
+    Attack-slot placement is COUPLED across fractions: each burst slot
+    draws one permutation rank from the key, and a slot attacks iff its
+    rank falls below ``attack_fraction``'s cut.  Raising the fraction only
+    *adds* attack slots (never moves them), which is what makes drop rate
+    provably monotone in attack load for the property tests, and
+    ``attack_fraction=0`` is bit-identical to the base workload.
+    """
+
+    base: Workload = None
+    attack_fraction: float = 0.0
+    burst: int = 32
+    attack_size: int = ATTACK_SIZE
+
+    def make_batch(self, key: jax.Array, n: int, pmax: int = 2048,
+                   **field_overrides) -> PacketBatch:
+        k1, k2 = jax.random.split(key)
+        sizes = self.base.sample_sizes(k1, n)
+        km, kip, kport = jax.random.split(
+            jax.random.fold_in(key, 0x5ADF), 3)
+        n_slots = -(-n // self.burst)
+        rank = jax.random.permutation(km, n_slots)
+        n_attack = int(round(self.attack_fraction * n_slots))
+        mask = rank[jnp.arange(n) // self.burst] < n_attack
+        sizes = jnp.where(mask, self.attack_size, sizes)
+        pkts = make_udp_batch(k2, n, sizes, pmax=pmax, **field_overrides)
+        spoof_ip = jax.random.randint(kip, (n,), 1 << 28, (1 << 31) - 1,
+                                      dtype=jnp.int32)
+        spoof_port = jax.random.randint(kport, (n,), 1024, 65536,
+                                        dtype=jnp.int32)
+        return pkts.replace(
+            src_ip=jnp.where(mask, spoof_ip, pkts.src_ip),
+            src_port=jnp.where(mask, spoof_port, pkts.src_port),
+            dst_ip=jnp.where(mask, jnp.int32(VICTIM_IP), pkts.dst_ip),
+            dst_port=jnp.where(mask, jnp.int32(VICTIM_PORT), pkts.dst_port),
+        )
+
+
+def adversarial(base: str | Workload = "enterprise",
+                attack_fraction: float = 0.5, burst: int = 32,
+                attack_size: int = ATTACK_SIZE) -> AdversarialWorkload:
+    """Small-packet-storm workload (attack-fraction x burst axes)."""
+    if isinstance(base, str):
+        base = {"enterprise": enterprise, "datacenter": datacenter}[base]()
+    frac = float(attack_fraction)
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"attack_fraction must be in [0, 1], got {frac}")
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    if attack_size - HDR_BYTES < 160:
+        raise ValueError(
+            f"attack_size {attack_size} is not splittable (payload < 160)")
+    # mixture view for the analytic helpers (mean bytes, splittable share)
+    sizes = np.append(base.sizes, np.int32(attack_size))
+    probs = np.append(base.probs * (1.0 - frac), frac)
+    return AdversarialWorkload(
+        name=f"adv_{base.name}_f{int(round(frac * 100)):02d}_b{burst}",
+        sizes=sizes, probs=probs, base=base, attack_fraction=frac,
+        burst=int(burst), attack_size=int(attack_size))
+
+
+def _flow_identity(flow: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Deterministic flow index -> (src_ip, src_port), murmur-style mix."""
+    h = flow.astype(jnp.int32) * jnp.int32(-2048144789)
+    h = h ^ (h >> 13)
+    h = h * jnp.int32(-1028477379)
+    h = h ^ (h >> 16)
+    ip = (h & jnp.int32(0x7FFFFFFF)) | jnp.int32(1)
+    port = jnp.int32(1024) + ((h >> 7) & jnp.int32(0x7FFF))
+    return ip, port
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnWorkload(Workload):
+    """Base traffic whose flow population slides over time.
+
+    Packets draw flows uniformly from a ``pool``-wide window that advances
+    by ``pool // 2`` every ``rotate`` packets (half-overlapping windows):
+    every flow stays active across two windows and then never returns.
+    With a NAT table smaller than the live window this sustains CLOCK
+    aging — mappings age out *while their flows are still sending*, which
+    is exactly the stale-mapping edge case ``nat_stale_hits`` counts.
+    """
+
+    base: Workload = None
+    pool: int = 256
+    rotate: int = 1024
+
+    def make_batch(self, key: jax.Array, n: int, pmax: int = 2048,
+                   **field_overrides) -> PacketBatch:
+        k1, k2 = jax.random.split(key)
+        sizes = self.base.sample_sizes(k1, n)
+        pkts = make_udp_batch(k2, n, sizes, pmax=pmax, **field_overrides)
+        ku = jax.random.fold_in(key, 0xC4)
+        u = jax.random.randint(ku, (n,), 0, self.pool, dtype=jnp.int32)
+        win = (jnp.arange(n, dtype=jnp.int32) // self.rotate)
+        flow = win * (self.pool // 2) + u
+        ip, port = _flow_identity(flow)
+        return pkts.replace(src_ip=ip, src_port=port)
+
+
+def churn(pool: int = 256, rotate: int = 1024,
+          base: str | Workload = "enterprise") -> ChurnWorkload:
+    """Sustained flow-churn workload (NAT CLOCK-aging pressure)."""
+    if isinstance(base, str):
+        base = {"enterprise": enterprise, "datacenter": datacenter}[base]()
+    if pool < 2 or rotate < 1:
+        raise ValueError(f"need pool >= 2 and rotate >= 1, got "
+                         f"({pool}, {rotate})")
+    return ChurnWorkload(
+        name=f"churn_{base.name}_p{pool}_r{rotate}", sizes=base.sizes,
+        probs=base.probs, base=base, pool=int(pool), rotate=int(rotate))
+
+
 def enterprise() -> Workload:
     return Workload("enterprise", ENTERPRISE_SIZES, ENTERPRISE_PROBS)
 
@@ -142,6 +277,19 @@ def flow_hash(pkts: PacketBatch) -> jax.Array:
     h = (h * jnp.int32(-2048144789)) ^ pkts.proto
     h = h ^ (h >> 13)
     return h & jnp.int32(0x7FFFFFFF)
+
+
+def pipe_trace_steps(packets: int, pipes: int, chunk: int) -> int:
+    """Per-pipe engine steps after §6.3.2 steering — mirrors
+    ``steer_pipes``'s default pipe-capacity rounding (~1.25x fair share,
+    rounded up to ``chunk``).  Fault windows (``switchsim.faults``) are
+    indexed in these per-pipe steps; ``ScenarioSpec`` validates fault
+    timing against this."""
+    if pipes == 1:
+        return packets // chunk
+    fair = -(-packets // pipes)
+    slack = (fair * 5) // 4
+    return -(-slack // chunk)
 
 
 def steer_pipes(

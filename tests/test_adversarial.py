@@ -1,0 +1,258 @@
+"""Adversarial & failure families: property tests (DESIGN.md §10).
+
+Property style: every test draws its cases from a fixed-seed generator
+(``_sampled``) — a deterministic stand-in for hypothesis, which the CI
+image does not ship.  The properties themselves are the ones that matter:
+
+  * wire-level drop rate is monotone in the attack fraction (the
+    adversarial workload couples fractions through one permutation rank,
+    so higher fractions are strict supersets of attack slots);
+  * parked-slot occupancy never exceeds the configured capacity, at any
+    step, on any pipe, under any attack mix;
+  * engine ≡ host loop stays bit-exact (counters + telemetry + NF
+    counters) across a randomly placed fault event, in both
+    recirculation modes, on the ref and pallas_interpret backends;
+  * the NAT stale-mapping rule (regression): an aged-out binding whose
+    flow returns must count ``nat_stale_hits`` and drop — never silently
+    translate — and the flow's next packet re-binds cleanly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.scenarios as S
+from benchmarks import compare
+from repro.core.packet import make_udp_batch
+from repro.nf.nat import Nat
+from repro.switchsim.faults import FaultSpec
+from repro.traffic.generator import (ATTACK_SIZE, VICTIM_IP, adversarial,
+                                     churn, enterprise, pipe_trace_steps)
+
+
+def _sampled(n, seed, draw):
+    """n deterministic pseudo-random cases for @pytest.mark.parametrize."""
+    rng = np.random.default_rng(seed)
+    return [draw(rng) for _ in range(n)]
+
+
+def _exhaust_spec(frac, burst, seed=0, **kw):
+    kw.setdefault("name", f"f{frac}_b{burst}_s{seed}")
+    kw.setdefault("chain", ("macswap",))
+    kw.setdefault("capacity", 32)   # inflight // 2
+    kw.setdefault("max_exp", 2)
+    kw.setdefault("packets", 128)
+    kw.setdefault("chunk", 32)
+    kw.setdefault("window", 2)
+    kw.setdefault("pmax", 512)
+    return S.ScenarioSpec(workload=("adversarial", "enterprise", frac, burst),
+                          seed=seed, **kw)
+
+
+def _drop_rate(r) -> float:
+    t = r.telemetry
+    return 1.0 - t.merged_pkts / t.wire_pkts
+
+
+class TestAdversarialWorkload:
+    def test_zero_fraction_is_bitexact_base_traffic(self):
+        key = jax.random.key(7)
+        base = enterprise().make_batch(key, 128, pmax=512)
+        adv = adversarial(attack_fraction=0.0).make_batch(key, 128, pmax=512)
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: jnp.array_equal(a, b), base, adv))
+
+    @pytest.mark.parametrize("case", _sampled(
+        3, seed=1, draw=lambda rng: (int(rng.integers(1, 64)),
+                                     int(rng.integers(0, 1000)))))
+    def test_attack_slots_are_supersets_across_fractions(self, case):
+        """The permutation-rank coupling: raising the fraction only ADDS
+        attack bursts — the monotone-drop property's foundation."""
+        burst, seed = case
+        key = jax.random.key(seed)
+        prev = None
+        for frac in (0.2, 0.5, 0.9):
+            wl = adversarial(attack_fraction=frac, burst=burst)
+            pkts = wl.make_batch(key, 128, pmax=512)
+            attacked = np.asarray(pkts.dst_ip) == VICTIM_IP
+            assert np.asarray(pkts.payload_len)[attacked].max(initial=0) \
+                <= ATTACK_SIZE - 42
+            if prev is not None:
+                assert np.all(attacked | ~prev), \
+                    "lower-fraction attack slots must survive at higher frac"
+            prev = attacked
+
+    def test_churn_windows_overlap_by_half(self):
+        # 64 draws over a 16-flow pool per window: every window visits
+        # (essentially) its whole pool, so the half-window overlap and the
+        # rotation are both deterministic at this density
+        wl = churn(pool=16, rotate=64)
+        pkts = wl.make_batch(jax.random.key(3), 256, pmax=512)
+        ips = np.asarray(pkts.src_ip)
+        windows = [set(ips[i:i + 64].tolist()) for i in range(0, 256, 64)]
+        for w0, w1 in zip(windows, windows[1:]):
+            assert w0 & w1, "adjacent churn windows must share flows"
+            assert w0 != w1, "adjacent churn windows must also rotate flows"
+        assert not (windows[0] & windows[2]), \
+            "a flow lives across two windows, then never returns"
+
+
+class TestDropRateMonotone:
+    @pytest.mark.parametrize("case", _sampled(
+        3, seed=2, draw=lambda rng: (int(rng.choice([4, 8, 16])),
+                                     int(rng.integers(0, 100)))))
+    def test_monotone_in_attack_fraction(self, case):
+        burst, seed = case
+        specs = [_exhaust_spec(f, burst, seed=seed)
+                 for f in (0.0, 0.5, 1.0)]
+        rates = [_drop_rate(r) for r in S.run_matrix(specs)]
+        assert rates == sorted(rates), (
+            f"drop rate not monotone in attack load: {rates}")
+
+
+class TestOccupancyBounded:
+    @pytest.mark.parametrize("case", _sampled(
+        4, seed=3, draw=lambda rng: (int(rng.choice([32, 64])),
+                                     float(rng.uniform(0.3, 1.0)),
+                                     int(rng.choice([4, 16])),
+                                     int(rng.integers(0, 100)))))
+    def test_occupancy_never_exceeds_capacity(self, case):
+        capacity, frac, burst, seed = case
+        spec = _exhaust_spec(round(frac, 2), burst, seed=seed,
+                             capacity=capacity)
+        r = S.run_matrix([spec])[0]
+        occ = np.asarray(r.per_pipe_occ_series)
+        assert occ.max() <= capacity
+        assert r.peak_occupancy <= capacity
+        assert occ.min() >= 0
+
+
+class TestEngineLoopThroughFaults:
+    """The §10 headline invariant: one compiled program, bit-exact with
+    the host loop through an arbitrarily placed fault event."""
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+    @pytest.mark.parametrize("recirc", [False, True])
+    def test_bitexact_across_random_fault(self, recirc, backend):
+        steps = pipe_trace_steps(128, 2, 32)
+        for kind, start, dur, pipe, drain, bknd in _sampled(
+                2, seed=17 + recirc, draw=lambda rng: (
+                    str(rng.choice(["server", "lb"])),
+                    int(rng.integers(0, steps)),
+                    0,  # placeholder, fixed below
+                    int(rng.integers(0, 2)),
+                    bool(rng.integers(0, 2)),
+                    int(rng.integers(0, 8)))):
+            dur = max(1, steps - start - 1)
+            fault = FaultSpec(kind=kind, start=start, duration=dur,
+                              pipe=pipe, backend=bknd, drain=drain)
+            spec = S.ScenarioSpec(
+                name=f"{kind}@{start}+{dur}", workload=("datacenter",),
+                chain=("fw", "nat", "lb"), pipes=2, recirc=recirc,
+                capacity=64, max_exp=2, packets=128, chunk=32, window=2,
+                pmax=512, flows=64, fw_rules=8, explicit_drops=True,
+                backend=backend, fault=fault)
+            r = S.run_matrix([spec])[0]
+            S.verify_oracle(r)  # counters + telemetry + NF counters
+
+    def test_fault_actually_changes_behaviour(self):
+        """A server fault over the whole trace must register fault_drops
+        and differ from the healthy twin — guards against the masks
+        silently not being threaded."""
+        healthy = S.ScenarioSpec(
+            name="healthy", workload=("datacenter",), chain=("fw", "nat"),
+            pipes=2, capacity=64, max_exp=2, packets=128, chunk=32,
+            window=2, pmax=512, explicit_drops=True)
+        steps = pipe_trace_steps(128, 2, 32)
+        faulted = dataclasses.replace(
+            healthy, name="faulted",
+            fault=FaultSpec(kind="server", start=0, duration=steps,
+                            pipe=0, drain=True))
+        rh, rf = S.run_matrix([healthy, faulted])  # one compile group
+        assert rh.counters["fault_drops"] == 0
+        assert rf.counters["fault_drops"] > 0
+        assert rf.telemetry.merged_pkts < rh.telemetry.merged_pkts
+        # drain semantics: no parked-slot leak even with pipe 0 dark
+        assert int(np.asarray(rf.per_pipe_occ_series)[:, -1].sum()) == 0
+
+
+class TestNatStaleRegression:
+    """§10 stale-mapping rule: aged-out binding + in-flight packets with
+    the old mapping -> counted + dropped, never silently translated."""
+
+    def _batch(self, ips, ports):
+        n = len(ips)
+        p = make_udp_batch(jax.random.key(0), n, 200, pmax=256)
+        return p.replace(src_ip=jnp.asarray(ips, jnp.int32),
+                         src_port=jnp.asarray(ports, jnp.int32))
+
+    def test_stale_hit_counts_drops_and_rebinds(self):
+        nat = Nat(capacity=8, max_exp=1)
+        st = nat.init_state()
+        flow_a = (100, 1000)
+        # 1) flow A binds
+        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        assert not bool(drop[0])
+        # 2) seven fillers take the seven free slots; the eighth finds the
+        #    table exhausted -> CLOCK ages every slot to zero (keys stay)
+        fillers = self._batch(list(range(200, 208)), [2000] * 8)
+        st, _, _, _ = nat(st, fillers)
+        assert int(jnp.sum(st["exp"])) == 0, "CLOCK aging must have fired"
+        # 3) flow A returns with its old (now stale) mapping in flight:
+        #    must count + drop + tear the binding down, NOT translate
+        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        assert bool(drop[0]), "stale mapping must not silently translate"
+        assert not bool(out.alive[0])
+        assert int(st["stale_hits"]) == 1
+        assert nat.state_counters(st)["nat_stale_hits"] == 1
+        assert not bool(jnp.any(st["key_ip"] == flow_a[0])), \
+            "stale binding must be torn down"
+        # 4) the very next packet of flow A re-binds cleanly
+        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        assert not bool(drop[0])
+        assert int(out.src_port[0]) >= nat.base_port
+        assert int(st["stale_hits"]) == 1, "re-bind is not a stale hit"
+
+    def test_fresh_flow_on_aged_slot_is_not_stale(self):
+        """Aging alone is not a stale hit: a NEW flow re-using an aged
+        slot is a clean insert."""
+        nat = Nat(capacity=8, max_exp=1)
+        st = nat.init_state()
+        st, _, _, _ = nat(st, self._batch(list(range(50, 59)), [3000] * 9))
+        st, out, drop, _ = nat(st, self._batch([999], [4000]))
+        assert not bool(drop[0])
+        assert int(st["stale_hits"]) == 0
+
+
+class TestDegradationGate:
+    """compare.py enforces the artifact ``degradation`` block."""
+
+    def _payload(self, ok):
+        gate = dict(metric="drop_rate", op="<=", bound=0.5,
+                    value=0.4 if ok else 0.9, ok=ok)
+        return {"schema": 2, "bench": "adversarial", "rows": [],
+                "summary": {},
+                "degradation": {"ok": ok, "scenarios": {
+                    "pt": {"metrics": {"drop_rate": gate["value"]},
+                           "gates": [gate]}}}}
+
+    def test_false_gate_fails(self):
+        probs = compare.compare_degradation(self._payload(True),
+                                            self._payload(False))
+        assert any(p.startswith("INVARIANT") for p in probs)
+
+    def test_ok_gates_pass(self):
+        assert compare.compare_degradation(self._payload(True),
+                                           self._payload(True)) == []
+
+    def test_baseline_gate_may_not_disappear(self):
+        cand = self._payload(True)
+        del cand["degradation"]
+        probs = compare.compare_degradation(self._payload(True), cand)
+        assert any("MISSING" in p for p in probs)
+        cand2 = self._payload(True)
+        cand2["degradation"]["scenarios"]["pt"]["gates"] = []
+        probs2 = compare.compare_degradation(self._payload(True), cand2)
+        assert any("MISSING" in p and "drop_rate" in p for p in probs2)

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 import repro.scenarios as S
-from repro.nf.maglev import MaglevLB, build_table
+from repro.nf.maglev import MaglevLB, build_table, degraded_table
 from repro.traffic.generator import enterprise, steer_pipes
 
 
@@ -47,6 +47,60 @@ class TestMaglevTable:
         assert np.all(smaller[full == removed] != removed)
         assert moved.mean() < 0.35, (
             f"{moved.mean():.2%} of surviving slots remapped")
+
+    def test_kill_recover_round_trip(self):
+        """DESIGN.md §10 kill->recover: the degraded table drains the dead
+        backend with minimal disruption AND stays balanced; recovery is
+        the original table, so the recovered backend regains exactly its
+        original share and untouched flows were never remapped."""
+        backends = MaglevLB().backends
+        dead = 3
+        full = build_table(backends, 251)
+        down = degraded_table(backends, 251, dead)
+        # dead backend fully drained, entries remapped to ORIGINAL indices
+        assert not np.any(down == dead)
+        assert set(down.tolist()) == set(range(len(backends))) - {dead}
+        # minimal disruption among survivors
+        survived = full != dead
+        moved = (down != full) & survived
+        assert moved.mean() < 0.35, (
+            f"{moved.mean():.2%} of surviving slots remapped on kill")
+        # the degraded table is still (near-)perfectly balanced
+        counts = np.bincount(down, minlength=len(backends))
+        alive_counts = np.delete(counts, dead)
+        assert counts[dead] == 0
+        assert alive_counts.min() >= 251 // (len(backends) - 1)
+        assert alive_counts.max() - alive_counts.min() <= 1
+        # recovery restores bit-identical assignment: the recovered
+        # backend regains exactly its original share, and every flow that
+        # survived the outage untouched was never remapped at any point
+        recovered = build_table(backends, 251)
+        np.testing.assert_array_equal(recovered, full)
+        assert (recovered == dead).sum() == (full == dead).sum()
+
+    def test_kill_recover_round_trip_per_flow(self):
+        """The same round trip observed through MaglevLB's fault hook:
+        ctx['lb_up'] flips the table per step, so before/after outputs are
+        bit-identical and during-outage remaps stay minimal."""
+        pkts = enterprise().make_batch(jax.random.key(21), 256, pmax=256)
+        lb = MaglevLB(fault_target=3)
+        st = lb.init_state()
+        dead_ip = lb.backends[3]
+        up = {"lb_up": jnp.asarray(True)}
+        down = {"lb_up": jnp.asarray(False)}
+        _, before, _, _ = lb(st, pkts, ctx=up)
+        _, during, _, _ = lb(st, pkts, ctx=down)
+        _, after, _, _ = lb(st, pkts, ctx=up)
+        # nothing lands on the dead backend while it is down
+        assert dead_ip not in set(np.asarray(during.dst_ip).tolist())
+        # flows that were NOT on the dead backend mostly keep their
+        # assignment through the outage (minimal disruption, flow level)
+        b, d = np.asarray(before.dst_ip), np.asarray(during.dst_ip)
+        unaffected = b != dead_ip
+        assert (b[unaffected] != d[unaffected]).mean() < 0.35
+        # recovery: every flow returns to its pre-fault backend, so the
+        # recovered backend regains exactly its original flow share
+        np.testing.assert_array_equal(b, np.asarray(after.dst_ip))
 
 
 class TestBackendStabilityAcrossPipes:
