@@ -1,0 +1,20 @@
+"""replint: project-specific static analysis for the PayloadPark repro.
+
+Every headline number this repo reproduces rests on invariants that used
+to be enforced only by reviewer convention: all per-packet math flows
+through the backend ``dispatch`` (DESIGN.md §9), every counter and
+telemetry field the engine carries is mirrored bit-exactly in the host
+loop (the engine≡loop oracle, §3), table builds are process-deterministic
+(the PR 4 salted-``hash()`` Maglev bug), and jitted hot paths neither
+host-sync nor recompile per call.  ``repro.analysis`` makes those
+invariants machine-checked on every PR: an AST-based rule engine with
+structured ``file:line rule-id message`` findings, a committed suppression
+baseline (shrink-only), and JSON output for CI.  See DESIGN.md §11.
+
+CLI: ``python -m repro.analysis [paths...] [--json out.json]``.
+"""
+from repro.analysis.baseline import (Baseline, BaselineEntry,  # noqa: F401
+                                     load_baseline)
+from repro.analysis.core import (Finding, Project, Rule,  # noqa: F401
+                                 SourceFile, analyze, load_project)
+from repro.analysis.rules import ALL_RULES, rule_by_id  # noqa: F401

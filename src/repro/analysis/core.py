@@ -1,0 +1,282 @@
+"""The replint rule engine: source model, findings, and the analysis driver.
+
+Deliberately dependency-free (stdlib ``ast`` only) so the CI lint job can
+run it next to ruff without installing the package's jax stack; nothing
+here imports jax or the dataplane modules it analyses.
+
+Two rule granularities (DESIGN.md §11):
+
+  * per-file  — ``Rule.check_file(SourceFile)`` visits one parsed module;
+  * project   — ``Rule.check_project(Project)`` sees the whole analyzed
+    file set at once (the engine≡loop structural-parity rule RPL002 and
+    the kernel-package hygiene rule RPL006 are cross-file by nature).
+
+Findings carry a content fingerprint (rule | path | source-line text) so
+the suppression baseline survives unrelated line-number drift but expires
+the moment the suppressed line itself changes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+from pathlib import Path
+from typing import Iterable, Iterator
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One structured violation: ``path:line RPLnnn message``."""
+
+    path: str      # posix path, relative to the analysis root
+    line: int      # 1-based
+    rule: str      # "RPL001".."RPL007"
+    message: str
+    snippet: str = ""   # stripped source line, fingerprint input
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity for baseline matching: immune to line-number
+        drift, invalidated when the flagged line's text changes."""
+        key = f"{self.rule}|{self.path}|{self.snippet}"
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def as_dict(self) -> dict:
+        return dict(path=self.path, line=self.line, rule=self.rule,
+                    message=self.message, fingerprint=self.fingerprint)
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed module: path (relative, posix), text, AST, lines."""
+
+    path: str
+    text: str
+    tree: ast.Module
+    abspath: Path
+
+    @property
+    def lines(self) -> list[str]:
+        return self.text.splitlines()
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    @property
+    def parts(self) -> tuple[str, ...]:
+        """Path segments — rules scope themselves by directory name
+        (``nf``, ``switchsim``, ``kernels``, ``tests``, ...), which works
+        identically for the real tree and for test fixture trees."""
+        return tuple(Path(self.path).parts)
+
+    def in_dir(self, *names: str) -> bool:
+        return any(n in self.parts[:-1] for n in names)
+
+    def finding(self, node: ast.AST | int, rule: str, message: str) -> Finding:
+        line = node if isinstance(node, int) else node.lineno
+        return Finding(path=self.path, line=line, rule=rule, message=message,
+                       snippet=self.line_at(line))
+
+
+@dataclasses.dataclass
+class Project:
+    """The analyzed file set plus the root they are relative to."""
+
+    root: Path
+    files: list[SourceFile]
+
+    def find(self, *suffixes: str) -> SourceFile | None:
+        """First analyzed file whose path ends with one of ``suffixes``
+        (posix, e.g. ``"switchsim/engine.py"``)."""
+        for sfx in suffixes:
+            for f in self.files:
+                if f.path == sfx or f.path.endswith("/" + sfx):
+                    return f
+        return None
+
+    def load_sibling(self, anchor: SourceFile, relpath: str) -> SourceFile | None:
+        """Load a file located relative to ``anchor``'s directory, whether
+        or not it is part of the analyzed set (``--changed-only`` may hand
+        a cross-file rule only one side of its invariant)."""
+        target = (anchor.abspath.parent / relpath).resolve()
+        for f in self.files:
+            if f.abspath == target:
+                return f
+        return parse_file(target, self.root)
+
+
+class Rule:
+    """Base class: subclasses set ``rule_id``/``title`` and override one
+    or both check methods.  Rules must never raise on weird-but-valid
+    code — a rule that cannot decide stays silent (lint, not a verifier)."""
+
+    rule_id: str = "RPL000"
+    title: str = ""
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+
+def parse_file(path: Path, root: Path) -> SourceFile | None:
+    try:
+        text = path.read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError):
+        return None
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError:
+        return None
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return SourceFile(path=rel, text=text, tree=tree, abspath=path.resolve())
+
+
+def iter_py_files(paths: Iterable[Path]) -> Iterator[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(q for q in p.rglob("*.py") if q.is_file())
+        elif p.suffix == ".py" and p.is_file():
+            yield p
+
+
+def load_project(paths: Iterable[str | Path],
+                 root: str | Path | None = None) -> Project:
+    """Parse every .py under ``paths`` into a Project.  ``root`` anchors
+    the relative paths findings report (default: cwd)."""
+    rootp = Path(root) if root is not None else Path.cwd()
+    files = []
+    for p in iter_py_files(Path(p) for p in paths):
+        sf = parse_file(p, rootp)
+        if sf is not None:
+            files.append(sf)
+    return Project(root=rootp, files=files)
+
+
+def analyze(project: Project, rules: Iterable[Rule]) -> list[Finding]:
+    """Run every rule over the project; findings sorted by location."""
+    findings: list[Finding] = []
+    for rule in rules:
+        for f in project.files:
+            findings.extend(rule.check_file(f))
+        findings.extend(rule.check_project(project))
+    return sorted(set(findings))
+
+
+# --------------------------------------------------------------------------
+# Shared AST helpers used by several rules
+# --------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.lax.scan`` -> "jax.lax.scan"; "" when not a plain dotted path."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else ""
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted_name(call.func)
+
+
+def str_const(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def walk_calls(node: ast.AST) -> Iterator[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def func_defs(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield n
+
+
+def traced_functions(f: SourceFile) -> list[ast.FunctionDef]:
+    """Functions in this module that run under a JAX trace.
+
+    A function is considered traced when (transitively):
+      * it is decorated with ``jax.jit`` / ``jax.vmap`` / ``pmap`` /
+        ``shard_map`` or a ``partial(jax.jit, ...)`` thereof;
+      * its name is passed to ``jax.jit(...)`` / ``jax.vmap(...)`` / a
+        ``partial(jax.jit, ...)(...)`` call anywhere in the module (the
+        ``split = partial(jax.jit, ...)(split_fn)`` idiom);
+      * its name is the function operand of ``lax.scan`` / ``fori_loop`` /
+        ``while_loop`` / ``cond`` / ``switch``;
+      * it is a ``def`` nested inside a traced function (scan bodies).
+    """
+    wrappers = ("jit", "vmap", "pmap", "shard_map", "pallas_call",
+                "checkpoint", "remat", "grad", "value_and_grad")
+    lax_hofs = ("scan", "fori_loop", "while_loop", "cond", "switch",
+                "associated_scan", "associative_scan", "map")
+
+    def is_trace_wrapper(expr: ast.AST) -> bool:
+        name = dotted_name(expr)
+        if name.split(".")[-1] in wrappers and ("jax" in name or "pl" in name
+                                                or name in wrappers):
+            return True
+        # partial(jax.jit, ...) / functools.partial(jax.jit, ...)
+        if isinstance(expr, ast.Call) and \
+                dotted_name(expr.func).split(".")[-1] == "partial":
+            return any(is_trace_wrapper(a) for a in expr.args[:1])
+        return False
+
+    traced_names: set[str] = set()
+    for call in walk_calls(f.tree):
+        # jax.jit(run) / vmap(run) / partial(jax.jit, ...)(split_fn)
+        if is_trace_wrapper(call.func):
+            for a in call.args:
+                if isinstance(a, ast.Name):
+                    traced_names.add(a.id)
+        # lax.scan(step, ...) and friends take the traced body first
+        head = call_name(call).split(".")[-1]
+        if head in lax_hofs and ("lax" in call_name(call)):
+            for a in call.args[:1]:
+                if isinstance(a, ast.Name):
+                    traced_names.add(a.id)
+
+    roots: list[ast.FunctionDef] = []
+    for fn in func_defs(f.tree):
+        if fn.name in traced_names:
+            roots.append(fn)
+            continue
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) and not \
+                is_trace_wrapper(dec) else dec
+            if is_trace_wrapper(target) or is_trace_wrapper(dec):
+                roots.append(fn)
+                break
+
+    # close over nesting: any def inside a traced def is traced
+    out: list[ast.FunctionDef] = []
+    seen: set[int] = set()
+
+    def add(fn: ast.FunctionDef) -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        out.append(fn)
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and sub is not fn:
+                add(sub)
+
+    for fn in roots:
+        add(fn)
+    return out

@@ -1,0 +1,32 @@
+"""The replint rule set (RPL001–RPL007) — one module per invariant.
+
+Each rule encodes a contract the repo's results depend on (DESIGN.md §11);
+every rule cites the real defect class that motivated it.
+"""
+from __future__ import annotations
+
+from repro.analysis.core import Rule
+from repro.analysis.rules.determinism import NondeterminismRule
+from repro.analysis.rules.dispatch import DispatchRule
+from repro.analysis.rules.hostsync import HostSyncRule
+from repro.analysis.rules.kernelhygiene import KernelHygieneRule
+from repro.analysis.rules.oracletests import OracleTestRule
+from repro.analysis.rules.parity import ParityRule
+from repro.analysis.rules.recompile import RecompileRule
+
+ALL_RULES: tuple[Rule, ...] = (
+    DispatchRule(),
+    ParityRule(),
+    NondeterminismRule(),
+    RecompileRule(),
+    HostSyncRule(),
+    KernelHygieneRule(),
+    OracleTestRule(),
+)
+
+
+def rule_by_id(rule_id: str) -> Rule:
+    for r in ALL_RULES:
+        if r.rule_id == rule_id:
+            return r
+    raise KeyError(rule_id)

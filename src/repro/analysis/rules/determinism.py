@@ -1,0 +1,66 @@
+"""RPL003 — process-nondeterminism ban (the salted-``hash()`` class).
+
+PR 4 shipped a Maglev table build keyed on builtin ``hash(name)``:
+``PYTHONHASHSEED`` salts string hashes per process, so every fresh
+interpreter built a DIFFERENT permutation table — results were
+self-consistent within a run and unreproducible across runs, the worst
+kind of wrong.  The fix (``nf/maglev.py::_mix64``) replaced it with an
+explicit splitmix64.  This rule bans the whole defect class:
+
+  * builtin ``hash(...)`` — salted for str/bytes, never reproducible;
+  * ``time.time()`` / ``time.time_ns()`` — wall clock feeding logic
+    (benchmark timing is exempted via the suppression baseline, where the
+    exemption is visible and counted);
+  * iterating a ``set`` (literal, ``set(...)`` call, or comprehension) —
+    iteration order depends on the salted hashes, so any table or list
+    built from it is process-dependent; iterate ``sorted(...)`` instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile, dotted_name, walk_calls
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and dotted_name(node.func) in ("set",
+                                                                 "frozenset"):
+        return True
+    return False
+
+
+class NondeterminismRule(Rule):
+    rule_id = "RPL003"
+    title = "process-nondeterministic construct"
+
+    def check_file(self, f: SourceFile):
+        for call in walk_calls(f.tree):
+            name = dotted_name(call.func)
+            if name == "hash":
+                yield f.finding(
+                    call, self.rule_id,
+                    "builtin hash() is PYTHONHASHSEED-salted per process — "
+                    "use an explicit mix (e.g. splitmix64, cf. "
+                    "nf/maglev.py:_mix64) so table builds reproduce")
+            elif name in ("time.time", "time.time_ns"):
+                yield f.finding(
+                    call, self.rule_id,
+                    f"{name}() feeds wall-clock nondeterminism into the "
+                    "program — derive logic from seeds/config; timing-only "
+                    "uses belong in the suppression baseline")
+        for node in ast.walk(f.tree):
+            iters = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(g.iter for g in node.generators)
+            for it in iters:
+                if _is_set_expr(it):
+                    yield f.finding(
+                        it, self.rule_id,
+                        "iterating a set: order is salted-hash-dependent, "
+                        "so anything built from it varies per process — "
+                        "iterate sorted(...) instead")

@@ -1,0 +1,79 @@
+"""RPL001 — hot-path primitive math must flow through the backend registry.
+
+The PR 5 contract (DESIGN.md §9): the five per-packet primitives (and their
+low-level helpers) are implemented once in ``backend/ref.py`` and
+``kernels/*``, and every dataplane call site reaches them through
+``registry.dispatch(name, backend)``.  A direct import or call bypasses the
+backend axis — the benchmark's "pallas" column silently measures the ref
+path for that stage, exactly the shallow-NF failure NFSlicer documents.
+
+Flags, in dataplane modules (everything except ``backend/``, ``kernels/``,
+``analysis/`` and test files):
+
+  * ``from repro.backend.ref import crc16_tag`` (importing a primitive
+    function; ALL_CAPS constants like ``CRC_POLY`` stay importable);
+  * calls whose terminal name is a primitive (``crc16_tag(...)``,
+    ``ref.acl_match(...)``) when the module does not define it locally.
+
+A call carrying a ``backend=`` keyword is exempt: that is the signature of
+the sanctioned dispatch-routed wrappers (``core/header.crc16_tag`` routes
+through ``registry.dispatch`` and threads the caller's backend), not of
+the single-implementation functions this rule guards.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile, dotted_name, walk_calls
+
+# The registry's primitive surface plus the helpers backend/ref.py builds
+# them from — the names whose implementations must stay single-sourced.
+PRIMITIVE_FUNCS = frozenset({
+    "crc16_tag", "acl_match", "maglev_select",
+    "payload_store", "payload_fetch",
+    "crc16_bytes", "tag_bytes", "maglev_hash5",
+})
+
+# Modules allowed to touch primitives directly: the implementations
+# themselves, their kernels, the tests that assert cross-impl parity, and
+# this analyzer.
+EXEMPT_DIRS = ("backend", "kernels", "analysis", "tests")
+
+
+def _scoped(f: SourceFile) -> bool:
+    if f.in_dir(*EXEMPT_DIRS):
+        return False
+    base = f.parts[-1]
+    return not (base.startswith("test_") or base == "conftest.py")
+
+
+class DispatchRule(Rule):
+    rule_id = "RPL001"
+    title = "primitive math outside the backend dispatch"
+
+    def check_file(self, f: SourceFile):
+        if not _scoped(f):
+            return
+        local_defs = {n.name for n in ast.walk(f.tree)
+                      if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ImportFrom) and node.module and \
+                    ("backend" in node.module.split(".")
+                     or "kernels" in node.module.split(".")):
+                for alias in node.names:
+                    if alias.name in PRIMITIVE_FUNCS:
+                        yield f.finding(
+                            node, self.rule_id,
+                            f"imports primitive '{alias.name}' from "
+                            f"'{node.module}' — dataplane call sites must "
+                            "use registry.dispatch (constants are fine)")
+        for call in walk_calls(f.tree):
+            name = dotted_name(call.func)
+            leaf = name.split(".")[-1] if name else ""
+            if leaf in PRIMITIVE_FUNCS and leaf not in local_defs and \
+                    not any(kw.arg == "backend" for kw in call.keywords):
+                yield f.finding(
+                    call, self.rule_id,
+                    f"direct call to primitive '{leaf}' — route through "
+                    "registry.dispatch so the backend axis covers this "
+                    "stage")

@@ -1,0 +1,64 @@
+"""RPL005 — host synchronization inside hot-path traced code.
+
+The seed simulator paid a device->host round trip per chunk
+(``int(jnp.sum(...))`` byte tallies); the scanned engine exists to remove
+exactly that.  A ``.item()`` / ``float()`` / ``np.asarray()`` on a traced
+value either crashes under jit (``ConcretizationTypeError``) or — when the
+function sometimes runs eagerly — silently serializes the pipeline.
+
+Scope: modules under ``switchsim/`` and ``backend/`` (plus ``kernels/``),
+and only INSIDE functions the tracer reaches (decorated with ``jax.jit``
+etc., wrapped via ``partial(jax.jit, ...)(fn)``, passed to ``lax.scan`` &
+friends, or nested in one).  Host-side result finalization in the same
+modules (e.g. ``engine._sum_telemetry``) stays legal.
+
+Flags, within traced functions:
+
+  * ``x.item()`` — synchronous device->host transfer;
+  * ``np.*(...)`` — numpy on a traced value forces materialization;
+  * ``float(...)`` / ``int(...)`` / ``bool(...)`` of a computed value
+    (call/subscript/arithmetic operand; casts of config scalars are fine).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Rule, SourceFile, dotted_name,
+                                 traced_functions, walk_calls)
+
+HOT_DIRS = ("switchsim", "backend", "kernels")
+
+
+class HostSyncRule(Rule):
+    rule_id = "RPL005"
+    title = "host sync in hot path"
+
+    def check_file(self, f: SourceFile):
+        if not f.in_dir(*HOT_DIRS):
+            return
+        base = f.parts[-1]
+        if base.startswith("test_") or base == "conftest.py":
+            return
+        for fn in traced_functions(f):
+            for call in walk_calls(fn):
+                name = dotted_name(call.func)
+                if isinstance(call.func, ast.Attribute) and \
+                        call.func.attr == "item" and not call.args:
+                    yield f.finding(
+                        call, self.rule_id,
+                        ".item() inside a traced function is a synchronous "
+                        "device->host transfer — keep the value on device "
+                        "and reduce it after the scan")
+                elif name.split(".")[0] in ("np", "numpy"):
+                    yield f.finding(
+                        call, self.rule_id,
+                        f"{name}() inside a traced function materializes "
+                        "the traced value on host — use jnp/lax")
+                elif name in ("float", "int", "bool") and call.args and \
+                        isinstance(call.args[0], (ast.Call, ast.Subscript,
+                                                  ast.BinOp)):
+                    yield f.finding(
+                        call, self.rule_id,
+                        f"{name}() of a computed value inside a traced "
+                        "function host-syncs (the seed's per-chunk "
+                        "int(jnp.sum(...)) defect class)")

@@ -1,0 +1,144 @@
+"""RPL006 — kernel-package hygiene: signature parity + interpret path.
+
+Every Pallas kernel package (``kernels/<name>/``) carries three files:
+``ref.py`` (the jnp oracle the parity tests diff against), ``kernel.py``
+(the ``pallas_call`` body), and ``ops.py`` (the jitted public wrapper).
+Two structural invariants keep the "pallas" benchmark column honest:
+
+  * the ops wrapper's signature must match the oracle's (modulo the
+    ``interpret`` flag and layout-only ``_u8`` suffixes), so the registry
+    can swap implementations without per-call-site shims;
+  * the interpret path must be real end-to-end: the wrapper takes an
+    ``interpret`` kwarg AND forwards it to the kernel call, and the
+    kernel function exposes it.  A wrapper that takes ``interpret`` but
+    drops it silently runs ONE mode whatever the caller asked — under
+    ``backend="pallas"`` the benchmark then measures interpret mode (or
+    vice versa), which is precisely the silent-substrate-fallback failure
+    NFSlicer warns about.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Project, Rule, SourceFile, dotted_name,
+                                 walk_calls)
+
+
+def _norm(name: str) -> str:
+    for sfx in ("_kernel_op", "_ref", "_u8"):
+        if name.endswith(sfx):
+            name = name[: -len(sfx)]
+    return name
+
+
+def _params(fn: ast.FunctionDef) -> list[str]:
+    names = [a.arg for a in fn.args.posonlyargs + fn.args.args
+             + fn.args.kwonlyargs]
+    return [_norm(n) for n in names if n != "interpret"]
+
+
+def _defs(f: SourceFile) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in ast.walk(f.tree)
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _kernel_imports(ops: SourceFile) -> set[str]:
+    """Names imported from the sibling ``kernel`` module that look like
+    kernel entry points."""
+    out: set[str] = set()
+    for node in ast.walk(ops.tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                node.module.split(".")[-1] == "kernel":
+            for alias in node.names:
+                if alias.name.endswith("_kernel"):
+                    out.add(alias.asname or alias.name)
+    return out
+
+
+def _resolve_ref_params(project: Project, ref: SourceFile,
+                        wrapper_name: str) -> list[str] | None:
+    """Parameter list of the oracle matching ``wrapper_name``: a local
+    ``def`` in ref.py, or a re-export resolved into backend/ref.py."""
+    want = _norm(wrapper_name)
+    for name, fn in _defs(ref).items():
+        if _norm(name) == want:
+            return _params(fn)
+    for node in ast.walk(ref.tree):
+        if not (isinstance(node, ast.ImportFrom) and node.module):
+            continue
+        for alias in node.names:
+            if _norm(alias.asname or alias.name) != want:
+                continue
+            src = project.find("backend/ref.py") or \
+                project.load_sibling(ref, "../../backend/ref.py")
+            if src is not None:
+                fn = _defs(src).get(alias.name)
+                if fn is not None:
+                    return _params(fn)
+    return None
+
+
+class KernelHygieneRule(Rule):
+    rule_id = "RPL006"
+    title = "kernel package hygiene"
+
+    def check_project(self, project: Project):
+        for ops in project.files:
+            if ops.parts[-1] != "ops.py":
+                continue
+            kernel = project.load_sibling(ops, "kernel.py")
+            if kernel is None:
+                continue    # not a kernel package
+            yield from self._check_package(project, ops, kernel)
+
+    def _check_package(self, project: Project, ops: SourceFile,
+                       kernel: SourceFile):
+        kernel_names = _kernel_imports(ops)
+        if not kernel_names:
+            return
+        ref = project.load_sibling(ops, "ref.py")
+        if ref is None:
+            yield ops.finding(1, self.rule_id,
+                              "kernel package has no ref.py oracle")
+        kdefs = _defs(kernel)
+
+        for kname in sorted(kernel_names):
+            kfn = kdefs.get(kname)
+            if kfn is not None and "interpret" not in [
+                    a.arg for a in kfn.args.posonlyargs + kfn.args.args
+                    + kfn.args.kwonlyargs]:
+                yield kernel.finding(
+                    kfn, self.rule_id,
+                    f"kernel '{kname}' exposes no interpret parameter — "
+                    "every kernel must run under interpret mode for "
+                    "CPU-only CI validation")
+
+        for fn in _defs(ops).values():
+            calls = [c for c in walk_calls(fn)
+                     if dotted_name(c.func) in kernel_names]
+            if not calls:
+                continue
+            has_interpret = "interpret" in [
+                a.arg for a in fn.args.posonlyargs + fn.args.args
+                + fn.args.kwonlyargs]
+            if not has_interpret:
+                yield ops.finding(
+                    fn, self.rule_id,
+                    f"ops wrapper '{fn.name}' takes no interpret kwarg — "
+                    "callers cannot select compiled vs interpret mode")
+            for call in calls:
+                if not any(kw.arg == "interpret" for kw in call.keywords):
+                    yield ops.finding(
+                        call, self.rule_id,
+                        f"'{fn.name}' does not forward interpret to "
+                        f"'{dotted_name(call.func)}' — the kernel runs one "
+                        "hardcoded mode whatever the caller asked for")
+            if ref is None:
+                continue
+            ref_params = _resolve_ref_params(project, ref, fn.name)
+            if ref_params is not None and _params(fn) != ref_params:
+                yield ops.finding(
+                    fn, self.rule_id,
+                    f"ops wrapper '{fn.name}' signature {_params(fn)} does "
+                    f"not match its ref oracle {ref_params} — the registry "
+                    "swaps implementations by signature")

@@ -1,0 +1,80 @@
+"""RPL007 — oracle-test discipline: bit-exact claims get exact asserts.
+
+The engine≡loop and cross-backend contracts are BIT-exact (integer packet
+bytes, counters, telemetry) — that exactness is what lets the pallas
+column share the ref run's committed benchmark baselines.  A test that
+asserts such a contract with ``allclose``/``rtol`` quietly weakens it to
+"approximately reproduces", and a real divergence (an off-by-one counter,
+a truncated byte) can hide inside the tolerance forever.
+
+Flags, inside test functions whose name/class marks them as exactness
+oracles (``oracle``, ``bitexact``, ``parity``, ``engine``+``loop``,
+``cross_backend``, ``backends_match``, or any test calling a
+``*oracle*`` helper): calls to ``allclose``/``isclose``/``approx`` and
+``rtol=``/``atol=`` keywords.  Use ``array_equal`` / ``==`` instead.
+Genuinely approximate kernels (float attention) belong in the suppression
+baseline with the numerical justification spelled out.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import Rule, SourceFile, dotted_name, walk_calls
+
+EXACTNESS = re.compile(
+    r"oracle|bit_?exact|parity|cross_?backend|backends?_match"
+    r"|engine.*loop|loop.*engine|matches_loop|matches_engine")
+
+APPROX_CALLS = ("allclose", "isclose", "approx")
+
+
+def _is_test_file(f: SourceFile) -> bool:
+    return f.parts[-1].startswith("test_") or f.in_dir("tests")
+
+
+def _exactness_scoped(fn: ast.FunctionDef, classname: str) -> bool:
+    if EXACTNESS.search(f"{classname} {fn.name}".lower()):
+        return True
+    return any("oracle" in dotted_name(c.func).lower()
+               for c in walk_calls(fn))
+
+
+class OracleTestRule(Rule):
+    rule_id = "RPL007"
+    title = "approximate assert in a bit-exactness test"
+
+    def check_file(self, f: SourceFile):
+        if not _is_test_file(f):
+            return
+        for cls, fn in _test_functions(f.tree):
+            if not fn.name.startswith("test_"):
+                continue
+            if not _exactness_scoped(fn, cls):
+                continue
+            for call in walk_calls(fn):
+                leaf = dotted_name(call.func).split(".")[-1]
+                if leaf in APPROX_CALLS:
+                    yield f.finding(
+                        call, self.rule_id,
+                        f"{leaf}() in a bit-exactness test weakens the "
+                        "oracle to 'approximately equal' — assert exact "
+                        "equality (array_equal / ==)")
+                for kw in call.keywords:
+                    if kw.arg in ("rtol", "atol") and leaf not in APPROX_CALLS:
+                        yield f.finding(
+                            call, self.rule_id,
+                            f"{kw.arg}= tolerance in a bit-exactness test — "
+                            "assert exact equality (array_equal / ==)")
+    # rtol/atol on an allclose call would double-report; the keyword branch
+    # only covers tolerance kwargs smuggled into other comparison helpers.
+
+
+def _test_functions(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            yield "", node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef):
+                    yield node.name, sub

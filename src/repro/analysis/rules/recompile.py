@@ -1,0 +1,80 @@
+"""RPL004 — recompile hazards on the jit boundary.
+
+The engine's whole performance story is ONE compiled program per
+configuration: static jit args (and the ``lru_cache`` keys built from
+them) must be hashable and immutable, or each call either crashes
+(``unhashable type``) or — worse — recompiles silently.  Config-like
+dataclasses are this repo's static-arg currency (``ParkConfig``,
+``BackendConfig``, ``ScenarioSpec``, ``FaultSpec`` are all frozen).
+
+Flags:
+
+  * a ``@dataclasses.dataclass`` class whose name ends in ``Config`` or
+    ``Spec`` that is not declared ``frozen=True`` — non-frozen means
+    unhashable (no ``eq``-consistent ``__hash__``) and mutable under the
+    jit cache's feet;
+  * f-strings interpolating ``.shape`` inside traced functions — the
+    format runs at trace time, so the string bakes in one shape and is a
+    tell that shape-dependent python logic is hiding under the jit.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile, dotted_name, traced_functions
+
+STATIC_SUFFIXES = ("Config", "Spec")
+
+
+def _dataclass_decorator(cls: ast.ClassDef) -> ast.AST | None:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(target).split(".")[-1] == "dataclass":
+            return dec
+    return None
+
+
+def _frozen_true(dec: ast.AST) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False    # bare @dataclass
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+class RecompileRule(Rule):
+    rule_id = "RPL004"
+    title = "jit recompile hazard"
+
+    def check_file(self, f: SourceFile):
+        base = f.parts[-1]
+        if base.startswith("test_") or base == "conftest.py" \
+                or f.in_dir("tests"):
+            return
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not node.name.endswith(STATIC_SUFFIXES):
+                continue
+            dec = _dataclass_decorator(node)
+            if dec is not None and not _frozen_true(dec):
+                yield f.finding(
+                    node, self.rule_id,
+                    f"dataclass '{node.name}' is not frozen=True — "
+                    "*Config/*Spec classes are jit static args / cache "
+                    "keys and must be hashable and immutable")
+        for fn in traced_functions(f):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.JoinedStr):
+                    continue
+                for part in node.values:
+                    if isinstance(part, ast.FormattedValue) and any(
+                            isinstance(n, ast.Attribute) and n.attr == "shape"
+                            for n in ast.walk(part.value)):
+                        yield f.finding(
+                            node, self.rule_id,
+                            "f-string of a .shape inside a traced function "
+                            "formats at trace time and bakes in one shape — "
+                            "hoist it out of the jitted region")
+                        break

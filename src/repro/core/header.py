@@ -17,8 +17,10 @@ from __future__ import annotations
 import jax
 
 # Re-exports: the constants and byte-level routine are owned by the backend
-# ref module (shared with the Pallas kernel); historical importers keep
-# working through these names.
+# ref module (shared with the Pallas kernel); historical importers (incl.
+# tests/test_kernels.py) keep working through these names.  The function
+# re-exports are exempt from RPL001 via the replint baseline: this module
+# re-publishes them, it does not call them outside the dispatch.
 from repro.backend.ref import (CRC_INIT, CRC_POLY,  # noqa: F401
                                crc16_bytes, tag_bytes)
 from repro.backend.registry import dispatch

@@ -18,5 +18,6 @@ def acl_match(src_ip, rules, interpret: bool = True):
     # Pad with a sentinel that can never match a rule.
     ipp = jnp.pad(src_ip.astype(jnp.int32), (0, pad),
                   constant_values=-1).reshape(-1, LANES)
-    out = acl_match_kernel(ipp, rules.astype(jnp.int32)[None, :])
+    out = acl_match_kernel(ipp, rules.astype(jnp.int32)[None, :],
+                           interpret=interpret)
     return out.reshape(-1)[:b].astype(bool)

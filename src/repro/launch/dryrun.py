@@ -247,6 +247,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # sequence-sharded (Megatron SP) so per-layer residuals fit HBM
     rkw = {"sp_activations": shape.kind == "train"}
     rkw.update(rules_overrides or {})
+    # wall-clock here times the compile itself and is reported, never fed
+    # into program logic — exempt from RPL003 via the replint baseline
     t0 = time.time()
     try:
         # 1. full-config compile: proves sharding coherence + memory fit

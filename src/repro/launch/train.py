@@ -35,7 +35,8 @@ from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import TrainConfig, init_train_state, train_step
 
 
-@dataclasses.dataclass
+# frozen (RPL004): run options are read-only once constructed
+@dataclasses.dataclass(frozen=True)
 class RunConfig:
     arch: str
     steps: int = 100
@@ -123,6 +124,9 @@ def train(run: RunConfig, mesh=None, rules=None) -> dict:
     for step in range(start_step, stop_at):
         batch = stream.batch_at(step, jax.process_index(),
                                 jax.process_count())
+        # wall-clock feeds the straggler watchdog's step timing (an
+        # observability feature, not training logic) — exempt from RPL003
+        # via the replint baseline
         t0 = time.time()
         state, metrics, err_state = jstep(state, batch, err_state)
         loss = float(metrics["loss"])

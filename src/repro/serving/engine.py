@@ -62,7 +62,9 @@ def parked_payload_bytes(cfg: ModelConfig, position: int) -> int:
     return cfg.num_layers * position * per_tok * 2
 
 
-@dataclasses.dataclass
+# frozen (RPL004): *Config classes are hashable-static-arg currency; the
+# engine mutates its own arrays, never this config
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 8
     max_pages_per_req: int = 16

@@ -1,8 +1,12 @@
 """Adversarial & failure families: property tests (DESIGN.md §10).
 
-Property style: every test draws its cases from a fixed-seed generator
-(``_sampled``) — a deterministic stand-in for hypothesis, which the CI
-image does not ship.  The properties themselves are the ones that matter:
+Property style: hypothesis ``@given`` strategies behind the repo's
+module-level ``importorskip`` guard (the same idiom as test_core_park.py /
+test_serving.py — CI installs hypothesis explicitly, local runs without it
+skip).  Example counts are kept small because each example compiles or
+runs a full scenario matrix; ``deadline=None`` for the same reason.
+
+The properties:
 
   * wire-level drop rate is monotone in the attack fraction (the
     adversarial workload couples fractions through one permutation rank,
@@ -18,24 +22,25 @@ image does not ship.  The properties themselves are the ones that matter:
 """
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-import repro.scenarios as S
-from benchmarks import compare
-from repro.core.packet import make_udp_batch
-from repro.nf.nat import Nat
-from repro.switchsim.faults import FaultSpec
-from repro.traffic.generator import (ATTACK_SIZE, VICTIM_IP, adversarial,
-                                     churn, enterprise, pipe_trace_steps)
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
-def _sampled(n, seed, draw):
-    """n deterministic pseudo-random cases for @pytest.mark.parametrize."""
-    rng = np.random.default_rng(seed)
-    return [draw(rng) for _ in range(n)]
+import repro.scenarios as S  # noqa: E402
+from benchmarks import compare  # noqa: E402
+from repro.core.packet import make_udp_batch  # noqa: E402
+from repro.nf.nat import Nat  # noqa: E402
+from repro.switchsim.faults import FaultSpec  # noqa: E402
+from repro.traffic.generator import (ATTACK_SIZE, VICTIM_IP,  # noqa: E402
+                                     adversarial, churn, enterprise,
+                                     pipe_trace_steps)
 
 
 def _exhaust_spec(frac, burst, seed=0, **kw):
@@ -64,13 +69,11 @@ class TestAdversarialWorkload:
         assert jax.tree.all(jax.tree.map(
             lambda a, b: jnp.array_equal(a, b), base, adv))
 
-    @pytest.mark.parametrize("case", _sampled(
-        3, seed=1, draw=lambda rng: (int(rng.integers(1, 64)),
-                                     int(rng.integers(0, 1000)))))
-    def test_attack_slots_are_supersets_across_fractions(self, case):
+    @settings(max_examples=6, deadline=None)
+    @given(burst=st.integers(1, 63), seed=st.integers(0, 999))
+    def test_attack_slots_are_supersets_across_fractions(self, burst, seed):
         """The permutation-rank coupling: raising the fraction only ADDS
         attack bursts — the monotone-drop property's foundation."""
-        burst, seed = case
         key = jax.random.key(seed)
         prev = None
         for frac in (0.2, 0.5, 0.9):
@@ -100,11 +103,9 @@ class TestAdversarialWorkload:
 
 
 class TestDropRateMonotone:
-    @pytest.mark.parametrize("case", _sampled(
-        3, seed=2, draw=lambda rng: (int(rng.choice([4, 8, 16])),
-                                     int(rng.integers(0, 100)))))
-    def test_monotone_in_attack_fraction(self, case):
-        burst, seed = case
+    @settings(max_examples=3, deadline=None)
+    @given(burst=st.sampled_from([4, 8, 16]), seed=st.integers(0, 99))
+    def test_monotone_in_attack_fraction(self, burst, seed):
         specs = [_exhaust_spec(f, burst, seed=seed)
                  for f in (0.0, 0.5, 1.0)]
         rates = [_drop_rate(r) for r in S.run_matrix(specs)]
@@ -113,13 +114,13 @@ class TestDropRateMonotone:
 
 
 class TestOccupancyBounded:
-    @pytest.mark.parametrize("case", _sampled(
-        4, seed=3, draw=lambda rng: (int(rng.choice([32, 64])),
-                                     float(rng.uniform(0.3, 1.0)),
-                                     int(rng.choice([4, 16])),
-                                     int(rng.integers(0, 100)))))
-    def test_occupancy_never_exceeds_capacity(self, case):
-        capacity, frac, burst, seed = case
+    @settings(max_examples=4, deadline=None)
+    @given(capacity=st.sampled_from([32, 64]),
+           frac=st.floats(0.3, 1.0),
+           burst=st.sampled_from([4, 16]),
+           seed=st.integers(0, 99))
+    def test_occupancy_never_exceeds_capacity(self, capacity, frac, burst,
+                                              seed):
         spec = _exhaust_spec(round(frac, 2), burst, seed=seed,
                              capacity=capacity)
         r = S.run_matrix([spec])[0]
@@ -133,29 +134,29 @@ class TestEngineLoopThroughFaults:
     """The §10 headline invariant: one compiled program, bit-exact with
     the host loop through an arbitrarily placed fault event."""
 
+    STEPS = pipe_trace_steps(128, 2, 32)
+
     @pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
     @pytest.mark.parametrize("recirc", [False, True])
-    def test_bitexact_across_random_fault(self, recirc, backend):
-        steps = pipe_trace_steps(128, 2, 32)
-        for kind, start, dur, pipe, drain, bknd in _sampled(
-                2, seed=17 + recirc, draw=lambda rng: (
-                    str(rng.choice(["server", "lb"])),
-                    int(rng.integers(0, steps)),
-                    0,  # placeholder, fixed below
-                    int(rng.integers(0, 2)),
-                    bool(rng.integers(0, 2)),
-                    int(rng.integers(0, 8)))):
-            dur = max(1, steps - start - 1)
-            fault = FaultSpec(kind=kind, start=start, duration=dur,
-                              pipe=pipe, backend=bknd, drain=drain)
-            spec = S.ScenarioSpec(
-                name=f"{kind}@{start}+{dur}", workload=("datacenter",),
-                chain=("fw", "nat", "lb"), pipes=2, recirc=recirc,
-                capacity=64, max_exp=2, packets=128, chunk=32, window=2,
-                pmax=512, flows=64, fw_rules=8, explicit_drops=True,
-                backend=backend, fault=fault)
-            r = S.run_matrix([spec])[0]
-            S.verify_oracle(r)  # counters + telemetry + NF counters
+    @settings(max_examples=2, deadline=None)
+    @given(kind=st.sampled_from(["server", "lb"]),
+           start=st.integers(0, STEPS - 1),
+           pipe=st.integers(0, 1),
+           drain=st.booleans(),
+           bknd=st.integers(0, 7))
+    def test_bitexact_across_random_fault(self, recirc, backend, kind,
+                                          start, pipe, drain, bknd):
+        dur = max(1, self.STEPS - start - 1)
+        fault = FaultSpec(kind=kind, start=start, duration=dur,
+                          pipe=pipe, backend=bknd, drain=drain)
+        spec = S.ScenarioSpec(
+            name=f"{kind}@{start}+{dur}", workload=("datacenter",),
+            chain=("fw", "nat", "lb"), pipes=2, recirc=recirc,
+            capacity=64, max_exp=2, packets=128, chunk=32, window=2,
+            pmax=512, flows=64, fw_rules=8, explicit_drops=True,
+            backend=backend, fault=fault)
+        r = S.run_matrix([spec])[0]
+        S.verify_oracle(r)  # counters + telemetry + NF counters
 
     def test_fault_actually_changes_behaviour(self):
         """A server fault over the whole trace must register fault_drops
@@ -190,40 +191,40 @@ class TestNatStaleRegression:
 
     def test_stale_hit_counts_drops_and_rebinds(self):
         nat = Nat(capacity=8, max_exp=1)
-        st = nat.init_state()
+        st_ = nat.init_state()
         flow_a = (100, 1000)
         # 1) flow A binds
-        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        st_, out, drop, _ = nat(st_, self._batch([flow_a[0]], [flow_a[1]]))
         assert not bool(drop[0])
         # 2) seven fillers take the seven free slots; the eighth finds the
         #    table exhausted -> CLOCK ages every slot to zero (keys stay)
         fillers = self._batch(list(range(200, 208)), [2000] * 8)
-        st, _, _, _ = nat(st, fillers)
-        assert int(jnp.sum(st["exp"])) == 0, "CLOCK aging must have fired"
+        st_, _, _, _ = nat(st_, fillers)
+        assert int(jnp.sum(st_["exp"])) == 0, "CLOCK aging must have fired"
         # 3) flow A returns with its old (now stale) mapping in flight:
         #    must count + drop + tear the binding down, NOT translate
-        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        st_, out, drop, _ = nat(st_, self._batch([flow_a[0]], [flow_a[1]]))
         assert bool(drop[0]), "stale mapping must not silently translate"
         assert not bool(out.alive[0])
-        assert int(st["stale_hits"]) == 1
-        assert nat.state_counters(st)["nat_stale_hits"] == 1
-        assert not bool(jnp.any(st["key_ip"] == flow_a[0])), \
+        assert int(st_["stale_hits"]) == 1
+        assert nat.state_counters(st_)["nat_stale_hits"] == 1
+        assert not bool(jnp.any(st_["key_ip"] == flow_a[0])), \
             "stale binding must be torn down"
         # 4) the very next packet of flow A re-binds cleanly
-        st, out, drop, _ = nat(st, self._batch([flow_a[0]], [flow_a[1]]))
+        st_, out, drop, _ = nat(st_, self._batch([flow_a[0]], [flow_a[1]]))
         assert not bool(drop[0])
         assert int(out.src_port[0]) >= nat.base_port
-        assert int(st["stale_hits"]) == 1, "re-bind is not a stale hit"
+        assert int(st_["stale_hits"]) == 1, "re-bind is not a stale hit"
 
     def test_fresh_flow_on_aged_slot_is_not_stale(self):
         """Aging alone is not a stale hit: a NEW flow re-using an aged
         slot is a clean insert."""
         nat = Nat(capacity=8, max_exp=1)
-        st = nat.init_state()
-        st, _, _, _ = nat(st, self._batch(list(range(50, 59)), [3000] * 9))
-        st, out, drop, _ = nat(st, self._batch([999], [4000]))
+        st_ = nat.init_state()
+        st_, _, _, _ = nat(st_, self._batch(list(range(50, 59)), [3000] * 9))
+        st_, out, drop, _ = nat(st_, self._batch([999], [4000]))
         assert not bool(drop[0])
-        assert int(st["stale_hits"]) == 0
+        assert int(st_["stale_hits"]) == 0
 
 
 class TestDegradationGate:
