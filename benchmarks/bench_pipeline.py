@@ -41,6 +41,17 @@ values record ref-vs-Pallas throughput side by side (``pipes2`` next to
 ``pipes2_pallas_interpret``).  ``--oracle`` additionally verify_oracle's
 every point — engine≡loop counters+telemetry on that point's backend.
 
+``--devices`` runs the fabric scaling sweep instead (switchsim.fabric,
+DESIGN.md §12): each pipes point is re-run with its pipe axis sharded over
+every requested device count (1 is auto-included as the invariance
+reference), timing rows land as ``fabric/pipes{p}_dev{d}/pps`` and every
+device count's counters/telemetry/occupancy are asserted bit-identical to
+the single-device run (``shard_invariance_identical`` rows; the bench
+exits non-zero on any divergence).  ``--host-devices N`` applies the
+SNIPPETS.md ``--xla_force_host_platform_device_count`` recipe via
+``repro.distributed.force_host_devices`` before jax initializes, so
+CPU-only hosts (CI included) exercise real multi-device sharding.
+
     PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 1 2 4 8
     PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 2 --tiny
     PYTHONPATH=src python benchmarks/bench_pipeline.py --recirc
@@ -48,6 +59,8 @@ every point — engine≡loop counters+telemetry on that point's backend.
         --backend ref pallas_interpret
     PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 2 --tiny \
         --backend pallas_interpret --oracle
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --pipes 8 \
+        --host-devices 8 --devices 1 2 8 --oracle --json BENCH_fabric.json
 
 Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
 """
@@ -187,6 +200,81 @@ def bench(pipes_list, n_pkts, chunk, window, capacity, pmax, repeats,
     return rows, matrix
 
 
+def bench_fabric(pipes_list, devices_list, n_pkts, chunk, window, capacity,
+                 pmax, repeats, backends=("ref",), oracle: bool = False,
+                 explicit_drops: bool = False):
+    """Fabric scaling sweep (DESIGN.md §12): every pipes point re-run with
+    its pipe axis sharded over each requested device count.
+
+    Device count 1 is auto-included as the invariance reference even when
+    not requested: shard-count invariance — bit-identical counters,
+    telemetry, per-pipe peak occupancy and occupancy series across device
+    counts — is the sweep's correctness claim, asserted here and emitted
+    as exact-gated ``shard_invariance_identical`` rows.  Any divergence
+    exits non-zero.  Timing rows (``fabric/.../pps``) record the scaling
+    trajectory; ``devices_effective`` in the derived field exposes the
+    guarded fallback (requested counts that didn't divide the pipe axis or
+    exceeded visible devices ran replicated on one device).
+    """
+    from repro.switchsim import fabric
+    devices_list = sorted(set(devices_list) | {1})
+    specs = S.pipeline_grid(pipes_list, packets=n_pkts, chunk=chunk,
+                            window=window, pmax=pmax, capacity=capacity,
+                            explicit_drops=explicit_drops,
+                            backends=backends, devices=devices_list)
+    results = S.run_matrix(specs, time_runs=True, time_repeats=repeats)
+    matrix = {s.name: s.as_dict() for s in specs}
+    rows = []
+    points: dict = {}  # (pipes, backend) -> [(spec, result)] in devices order
+    for spec, res in zip(specs, results):
+        if oracle:
+            S.verify_oracle(res)  # engine≡loop per pipe, hence per shard
+        eff = fabric.resolve_devices(spec.pipes, spec.devices)
+        dt = res.wall_s
+        rows.append((
+            f"fabric/{spec.name}/pps", round(n_pkts / dt) if dt else 0,
+            f"wall_s={dt:.4f};devices={spec.devices};"
+            f"devices_effective={eff};pipes={spec.pipes};"
+            f"backend={spec.backend}", spec.name))
+        rows.append((
+            f"fabric/{spec.name}/goodput_gain",
+            round(res.gain["goodput_gain"], 4),
+            f"link_byte_saving={res.gain['link_byte_saving']:.4f};"
+            f"devices={spec.devices}", spec.name))
+        points.setdefault((spec.pipes, spec.backend), []).append((spec, res))
+
+    diverged = []
+    for (pipes, _bk), group in sorted(points.items()):
+        ref_spec, ref = group[0]  # devices=1 (devices_list is sorted)
+        assert ref_spec.devices == 1
+        label = ref_spec.name.rsplit("_dev", 1)[0]
+        bad = []
+        for spec, res in group[1:]:
+            same = (
+                res.counters == ref.counters
+                and res.per_pipe_counters == ref.per_pipe_counters
+                and res.telemetry == ref.telemetry
+                and res.per_pipe_telemetry == ref.per_pipe_telemetry
+                and res.nf_counters == ref.nf_counters
+                and res.per_pipe_nf_counters == ref.per_pipe_nf_counters
+                and res.per_pipe_peak_occupancy
+                == ref.per_pipe_peak_occupancy
+                and np.array_equal(np.asarray(res.per_pipe_occ_series),
+                                   np.asarray(ref.per_pipe_occ_series)))
+            if not same:
+                bad.append(spec.name)
+        rows.append((
+            f"fabric/{label}/shard_invariance_identical", int(not bad),
+            f"devices={'/'.join(str(s.devices) for s, _ in group)};"
+            f"diverged={','.join(bad) or 'none'}", label))
+        diverged.extend(bad)
+    if diverged:
+        raise SystemExit(
+            f"shard-count invariance violated: {', '.join(diverged)} "
+            f"diverged from the single-device reference")
+    return rows, matrix
+
+
 def bench_recirc(n_pkts, chunk, window, pmax, recirc_frac=0.25):
     """Paper §6.2.5 / Fig. 13 direction on the stateful engine: sweep table
     occupancy (capacity vs the in-flight window) and compare goodput gain
@@ -258,6 +346,16 @@ def main() -> None:
     ap.add_argument("--oracle", action="store_true",
                     help="verify_oracle every sweep point (engine≡loop "
                          "counters+telemetry on that point's backend)")
+    ap.add_argument("--devices", type=int, nargs="+", default=[1],
+                    help="fabric scaling sweep (DESIGN.md §12): shard each "
+                         "pipes point over these device counts (1 is "
+                         "auto-included as the invariance reference); "
+                         "emits fabric/* rows instead of pipeline/*")
+    ap.add_argument("--host-devices", type=int, default=0, metavar="N",
+                    help="force the CPU platform to expose N devices "
+                         "(repro.distributed.force_host_devices; must run "
+                         "before jax initializes, which this flag "
+                         "guarantees by applying it first)")
     ap.add_argument("--recirc", action="store_true",
                     help="run the recirculation occupancy sweep "
                          "(paper §6.2.5) instead of the pipes sweep")
@@ -274,6 +372,11 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 512 packets, chunk 64, small table")
     args = ap.parse_args()
+    if args.host_devices:
+        # before ANY jax device use — force_host_devices raises if too late
+        from repro.distributed import force_host_devices
+        force_host_devices(args.host_devices)
+    fabric_sweep = args.devices != [1]
     if args.recirc:
         # the occupancy sweep owns these knobs; fail loudly rather than
         # silently ignoring an explicit flag
@@ -284,11 +387,20 @@ def main() -> None:
             ("--explicit-drops", args.explicit_drops, False),
             ("--backend", tuple(args.backend), ("ref",)),
             ("--oracle", args.oracle, False),
+            ("--devices", tuple(args.devices), (1,)),
         ) if val != default]
         if ignored:
             ap.error(f"--recirc does not take {', '.join(ignored)} "
                      f"(the sweep sets capacity per occupancy point and "
                      f"always verifies against the loop oracle)")
+    if fabric_sweep:
+        if len(args.backend) > 1:
+            ap.error("--devices sweeps take a single --backend (the "
+                     "invariance reference is per (pipes, backend) point)")
+        if args.no_verify:
+            ap.error("--no-verify only applies to the pipes sweep's "
+                     "seed-loop check; the fabric sweep's invariance "
+                     "check is not optional")
     if args.tiny:
         args.packets, args.chunk, args.capacity = 512, 64, 256
         args.pmax, args.repeats = 512, 1
@@ -298,6 +410,13 @@ def main() -> None:
     if args.recirc:
         rows, matrix = bench_recirc(args.packets, args.chunk, args.window,
                                     args.pmax, recirc_frac=args.recirc_frac)
+    elif fabric_sweep:
+        rows, matrix = bench_fabric(args.pipes, args.devices, args.packets,
+                                    args.chunk, args.window, args.capacity,
+                                    args.pmax, args.repeats,
+                                    backends=args.backend,
+                                    oracle=args.oracle,
+                                    explicit_drops=args.explicit_drops)
     else:
         rows, matrix = bench(args.pipes, args.packets, args.chunk,
                              args.window, args.capacity, args.pmax,
@@ -316,8 +435,10 @@ def main() -> None:
         if not args.recirc and len(args.backend) == 1:
             from repro.backend import as_config
             backend = as_config(args.backend[0]).concrete().default
-        write_bench_json(args.json, "recirc" if args.recirc else "pipeline",
-                         rows, matrix=matrix, backend=backend)
+        family = ("recirc" if args.recirc
+                  else "fabric" if fabric_sweep else "pipeline")
+        write_bench_json(args.json, family, rows, matrix=matrix,
+                         backend=backend)
 
 
 if __name__ == "__main__":

@@ -6,11 +6,14 @@ exactly that.  A ``.item()`` / ``float()`` / ``np.asarray()`` on a traced
 value either crashes under jit (``ConcretizationTypeError``) or — when the
 function sometimes runs eagerly — silently serializes the pipeline.
 
-Scope: modules under ``switchsim/`` and ``backend/`` (plus ``kernels/``),
-and only INSIDE functions the tracer reaches (decorated with ``jax.jit``
-etc., wrapped via ``partial(jax.jit, ...)(fn)``, passed to ``lax.scan`` &
-friends, or nested in one).  Host-side result finalization in the same
-modules (e.g. ``engine._sum_telemetry``) stays legal.
+Scope: modules under ``switchsim/`` and ``backend/`` (plus ``kernels/``
+and ``distributed/`` — ``shard_map`` bodies are traced code too, and a
+host sync inside the fabric's per-shard program serializes every device,
+DESIGN.md §12), and only INSIDE functions the tracer reaches (decorated
+with ``jax.jit`` etc., wrapped via ``partial(jax.jit, ...)(fn)``, passed
+to ``lax.scan``/``shard_map`` & friends, or nested in one).  Host-side
+result finalization in the same modules (e.g. ``engine._sum_telemetry``)
+stays legal.
 
 Flags, within traced functions:
 
@@ -26,7 +29,7 @@ import ast
 from repro.analysis.core import (Rule, SourceFile, dotted_name,
                                  traced_functions, walk_calls)
 
-HOT_DIRS = ("switchsim", "backend", "kernels")
+HOT_DIRS = ("switchsim", "backend", "kernels", "distributed")
 
 
 class HostSyncRule(Rule):

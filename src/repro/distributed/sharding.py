@@ -15,6 +15,16 @@ Rules are name+shape based over the flattened param paths; anything
 unmatched replicates.  ``guarded(axis, dim)`` falls back to replication when
 the dimension does not divide the axis size — so every rule is safe for the
 reduced CPU smoke configs as well as the full 512-chip mesh.
+
+Two consumers share the helpers here (``axis_size``/``divides_axis`` and
+the guarded-fallback idiom):
+
+  * ``launch/dryrun.py`` — the serving/training side: ``Rules`` resolves
+    PartitionSpecs for every (arch x shape x mesh) dry-run cell;
+  * ``switchsim/fabric.py`` — the dataplane side: the engine's flat pipe
+    axis shard_mapped over a 1-D ``("switch",)`` mesh, replicating (one
+    device) whenever the pipe count does not divide the device count
+    (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -35,6 +45,15 @@ def axis_size(mesh: Mesh, name) -> int:
     if isinstance(name, (tuple, list)):
         return int(np.prod([axis_size(mesh, n) for n in name]))
     return mesh.shape[name] if name in mesh.shape else 1
+
+
+def divides_axis(dim: int, size: int) -> bool:
+    """The guarded-sharding predicate: can ``dim`` shard over an axis of
+    ``size`` devices without padding?  Every sharding decision in this
+    repo — ``Rules.g`` for model dims, ``fabric.resolve_devices`` for the
+    pipe axis — routes through this one check so "doesn't divide" always
+    means the same thing: fall back to replication, never pad or crash."""
+    return dim % max(size, 1) == 0
 
 
 def dp_axes(mesh: Mesh):
@@ -86,7 +105,7 @@ class Rules:
     # -- helpers ------------------------------------------------------------
     def g(self, dim: int, axis: str = "model") -> Optional[str]:
         """axis if dim divides its size, else None (replicate)."""
-        return axis if dim % max(axis_size(self.mesh, axis), 1) == 0 else None
+        return axis if divides_axis(dim, axis_size(self.mesh, axis)) else None
 
     def named(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)

@@ -1,10 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  Everything below is ordinary code.
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this builds the production mesh, resolves sharding rules,
@@ -26,6 +19,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback
@@ -35,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.configs.shapes import SHAPES, applicable
+from repro.distributed import force_host_devices
 from repro.distributed.sharding import Rules
 from repro.launch import inputs as inp
 from repro.launch.accounting import accounting_blocks, probe_plan
@@ -343,6 +338,13 @@ def optimized_overrides(arch: str, shape_name: str) -> tuple[dict, dict]:
 
 
 def main() -> None:
+    # Must run before the first jax backend init (importing jax above is
+    # fine — the device count locks at init, not import).  At CLI-entry
+    # rather than module top so importing this module for its parsers
+    # (tests, roofline.py) never touches the device count; when it IS too
+    # late, force_host_devices raises instead of silently mutating a dead
+    # env var — the bug the old inline XLA_FLAGS mutation here carried.
+    force_host_devices(512)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -44,27 +44,34 @@ def _base(tiny: bool, **kw) -> ScenarioSpec:
 
 def pipeline_grid(pipes_list, *, packets, chunk, window, pmax, capacity,
                   explicit_drops: bool = False,
-                  backends=("ref",)) -> list[ScenarioSpec]:
+                  backends=("ref",), devices=(1,)) -> list[ScenarioSpec]:
     """The pipes sweep at explicit geometry — the ONE definition of the
     §6.3.2 grid; ``pipeline_family`` and ``bench_pipeline``'s CLI both
     delegate here so the two can never drift apart.
 
-    ``backends`` adds the dataplane-backend axis (DESIGN.md §9).  A
-    single-backend sweep keeps the historical point names (``pipes2``) so
-    committed artifact baselines keep matching regardless of which backend
-    produced them; a multi-backend sweep separates the points by name
-    (``pipes2_pallas_interpret``) so one artifact records the backends
-    side by side."""
+    ``backends`` adds the dataplane-backend axis (DESIGN.md §9) and
+    ``devices`` the fabric-sharding axis (DESIGN.md §12;
+    ``bench_pipeline --devices``).  Single-valued axes keep the historical
+    point names (``pipes2``) so committed artifact baselines keep matching
+    regardless of which backend/device count produced them; multi-valued
+    axes separate the points by name (``pipes2_pallas_interpret``,
+    ``pipes2_dev4``) so one artifact records the sweep side by side."""
     base = ScenarioSpec(
         name="", workload=("enterprise",), chain=("fw", "nat"),
         capacity=capacity, max_exp=2, packets=packets, chunk=chunk,
         window=window, pmax=pmax, explicit_drops=explicit_drops)
     backends = list(backends)
+    devices = list(devices)
+    name, axes = "pipes{pipes}", dict(pipes=list(pipes_list))
     if len(backends) == 1:
         base = dataclasses.replace(base, backend=backends[0])
-        return grid(base, "pipes{pipes}", pipes=list(pipes_list))
-    return grid(base, "pipes{pipes}_{backend}", pipes=list(pipes_list),
-                backend=backends)
+    else:
+        name, axes["backend"] = name + "_{backend}", backends
+    if len(devices) == 1:
+        base = dataclasses.replace(base, devices=devices[0])
+    else:
+        name, axes["devices"] = name + "_dev{devices}", devices
+    return grid(base, name, **axes)
 
 
 @register("pipeline")

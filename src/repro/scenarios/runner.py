@@ -122,19 +122,25 @@ def run_matrix(specs, time_runs: bool = False,
     results: list = [None] * len(prepared)
     for key, members in groups.items():
         (cfg, chain, window, _chunk, _steps, _pmax, explicit_drops,
-         _lane, backend) = key
+         _lane, backend, devices) = key
         stacked = _cat_pipe_axis([prepared[i].traces for i in members])
         # fault masks ride the same stacked pipe axis as the traces —
         # healthy members contribute all-True columns, so one compiled
         # program serves faulted and healthy points alike (DESIGN.md §10)
         stacked_faults = F.concat([prepared[i].faults for i in members])
 
+        # ``devices`` shards the group's *concatenated* pipe axis
+        # (switchsim.fabric): the group stays ONE program whose shards
+        # may each hold pipes from different scenario points — the
+        # per-scenario regrouping below gathers across shard boundaries
+        # transparently (DESIGN.md §12).
         def run(cfg=cfg, chain=chain, stacked=stacked, window=window,
                 explicit_drops=explicit_drops, backend=backend,
-                stacked_faults=stacked_faults):
+                stacked_faults=stacked_faults, devices=devices):
             return E.run_pipes(cfg, chain, stacked, window=window,
                                explicit_drops=explicit_drops,
-                               backend=backend, faults=stacked_faults)
+                               backend=backend, faults=stacked_faults,
+                               devices=devices)
 
         res = run()
         if time_runs:
@@ -198,6 +204,13 @@ def verify_oracle(result: ScenarioResult, faults=True) -> None:
     the loop (the default; the engine≡loop invariant must hold *through*
     fault events).  Pass ``faults=False`` to re-run the loop healthy —
     useful only for demonstrating that a fault actually changed behaviour.
+
+    **Per-shard semantics** (``spec.devices`` > 1, DESIGN.md §12): the
+    fabric shards the pipe axis contiguously, so the per-pipe check below
+    *is* the per-shard check — each device's pipe slice is verified
+    independently against its own host-loop re-run, with no cross-shard
+    state to reconcile.  Mismatch messages name the shard the diverging
+    pipe ran on so multi-device failures localize to a device.
     """
     spec = result.spec
     # reuse the traffic/chain/traces the result was computed from; a
@@ -206,7 +219,14 @@ def verify_oracle(result: ScenarioResult, faults=True) -> None:
     p = result.prepared if result.prepared is not None else _prepare(spec)
     cfg = spec.park_config()
     from repro.core.packet import from_time_major
+    # contiguous shard of each pipe index, for mismatch localization
+    # (devices that didn't divide the pipe axis ran replicated on shard 0)
+    per_shard = (spec.pipes // spec.devices
+                 if spec.pipes % spec.devices == 0 else spec.pipes)
     for pipe in range(spec.pipes):
+        shard = pipe // max(per_shard, 1)
+        where = (f"{spec.name} pipe {pipe} (shard {shard}/{spec.devices})"
+                 if spec.devices > 1 else f"{spec.name} pipe {pipe}")
         flat = from_time_major(jax.tree.map(lambda a: a[pipe], p.traces))
         loop = simulate_loop(cfg, p.chain, flat, window=spec.window,
                              chunk=spec.chunk,
@@ -216,17 +236,17 @@ def verify_oracle(result: ScenarioResult, faults=True) -> None:
                              fault_pipe=pipe)
         if loop.counters != result.per_pipe_counters[pipe]:
             raise OracleMismatch(
-                f"{spec.name} pipe {pipe}: counters diverged\n"
+                f"{where}: counters diverged\n"
                 f"  engine: {result.per_pipe_counters[pipe]}\n"
                 f"  loop:   {loop.counters}")
         if loop.telemetry != result.per_pipe_telemetry[pipe]:
             raise OracleMismatch(
-                f"{spec.name} pipe {pipe}: telemetry diverged\n"
+                f"{where}: telemetry diverged\n"
                 f"  engine: {result.per_pipe_telemetry[pipe]}\n"
                 f"  loop:   {loop.telemetry}")
         if loop.nf_counters != result.per_pipe_nf_counters[pipe]:
             raise OracleMismatch(
-                f"{spec.name} pipe {pipe}: NF counters diverged\n"
+                f"{where}: NF counters diverged\n"
                 f"  engine: {result.per_pipe_nf_counters[pipe]}\n"
                 f"  loop:   {loop.nf_counters}")
 

@@ -60,6 +60,13 @@ class ScenarioSpec:
     still share a compile group.  ``nat_capacity`` overrides the NAT
     flow-table size (0 = the NF's default) — the churn family shrinks it
     below the live flow window to sustain CLOCK aging.
+
+    ``devices`` shards the point's flat pipe axis over that many devices
+    (``switchsim.fabric``, DESIGN.md §12) — a first-class grid axis and
+    part of the compile key, since a sharded program is a different XLA
+    program even at equal shapes.  Results are device-count invariant
+    (bit-identical counters/telemetry/occupancy), so scaling sweeps vary
+    only wall-clock.
     """
 
     name: str
@@ -81,6 +88,7 @@ class ScenarioSpec:
     backend: str = "auto"
     fault: FaultSpec = NO_FAULT
     nat_capacity: int = 0
+    devices: int = 1
 
     def __post_init__(self):
         as_config(self.backend)  # validates the backend name eagerly
@@ -90,6 +98,8 @@ class ScenarioSpec:
                 f"of chunk ({self.chunk})")
         if self.pipes < 1:
             raise ValueError(f"{self.name}: pipes must be >= 1")
+        if self.devices < 1:
+            raise ValueError(f"{self.name}: devices must be >= 1")
         resolve_workload(self.workload)  # validates the name eagerly
         for nf in self.chain:
             if nf not in _NF_NAMES:
@@ -262,8 +272,11 @@ def compile_key(spec: ScenarioSpec, chain: Chain, steps: int):
     equal trace geometry (``steps`` is taken from the point's actual
     steered traces, so per-pipe capacity rounding is reflected exactly),
     and the same concrete backend selection (a ref point and a Pallas
-    point are different XLA programs even at equal shapes).  Points that
-    differ only in workload, seed or flow structure batch together;
+    point are different XLA programs even at equal shapes).  ``devices``
+    is part of the key for the same reason: a shard_mapped program is a
+    different XLA program, and a compile group spanning devices must stay
+    ONE program whose concatenated pipe axis shards as a whole.  Points
+    that differ only in workload, seed or flow structure batch together;
     shape-changing axes (occupancy/capacity, recirc_frac, chunk, window)
     fall back to the engine's lru_cache-keyed per-point loop.
     """
@@ -271,4 +284,4 @@ def compile_key(spec: ScenarioSpec, chain: Chain, steps: int):
     cfg = spec.park_config()
     lane = E.recirc_slots(cfg, spec.chunk)
     return (cfg, chain, spec.window, spec.chunk, steps, spec.pmax,
-            spec.explicit_drops, lane, spec.backend_config())
+            spec.explicit_drops, lane, spec.backend_config(), spec.devices)

@@ -298,13 +298,19 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
 @lru_cache(maxsize=None)
 def _compiled(cfg: ParkConfig, chain: Chain, window: int,
               explicit_drops: bool, backend, collect_sent: bool,
-              pipes: bool, recirc: int):
+              pipes: bool, recirc: int, devices: int = 1):
     # ``backend`` is a concrete (platform-resolved) BackendConfig, so the
     # cache key — like the jit static args — specializes per backend.
+    # ``devices`` > 1 shard_maps the vmapped pipe axis over the fabric
+    # mesh (switchsim.fabric, DESIGN.md §12); the caller has already
+    # resolved it through ``fabric.resolve_devices``.
     run = _build_scan(cfg, chain, window, explicit_drops, backend,
                       collect_sent, recirc)
     if pipes:
         run = jax.vmap(run)
+        if devices > 1:
+            from repro.switchsim.fabric import shard_over_switch
+            run = shard_over_switch(run, devices)
     return jax.jit(run)
 
 
@@ -429,6 +435,7 @@ def run_pipes(
     use_kernel: bool | None = None,
     collect_sent: bool = False,
     faults=None,
+    devices: int = 1,
 ) -> PipesResult:
     """Run P independent pipes over (P, T, chunk, ...) traces, vmapped.
 
@@ -438,6 +445,12 @@ def run_pipes(
     ``backend``/``use_kernel``/``faults`` behave exactly as in
     ``run_engine`` (``FaultArrays`` here may carry per-pipe masks stacked
     by the scenario runner across batched scenario points).
+
+    ``devices`` > 1 shards the pipe axis over that many devices via
+    ``switchsim.fabric`` (mesh axis ``"switch"``, DESIGN.md §12).  Results
+    are bit-identical for any device count (shard-count invariance); the
+    request falls back to 1 with a warning when the pipe count does not
+    divide it or fewer devices are visible.
     """
     backend = coerce_backend(backend, use_kernel)
     n_pipes = jax.tree.leaves(traces)[0].shape[0]
@@ -448,8 +461,11 @@ def run_pipes(
     fa = F.resolve(faults, pipes=n_pipes, steps=steps)
     s_up, l_up, drain = _pad_masks(fa, pad)
     traces = _pad_trace(traces, pad, axis=1)
+    if devices != 1:
+        from repro.switchsim import fabric
+        devices = fabric.resolve_devices(n_pipes, devices)
     fn = _compiled(cfg, chain, window, explicit_drops, backend,
-                   collect_sent, pipes=True, recirc=lane)
+                   collect_sent, pipes=True, recirc=lane, devices=devices)
     state, cstates, ys = fn(traces, s_up, l_up, drain)
     merged, sent, occ = _finalize(ys, window, collect_sent, time_axis=1)
     per_tel = _per_pipe_telemetry(ys)

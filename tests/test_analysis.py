@@ -342,10 +342,39 @@ def test_rpl005_scoped_to_hot_dirs(tmp_path):
     assert run_replint(tmp_path, files, "RPL005") == []
 
 
+def test_rpl005_fires_inside_shard_map_body_under_distributed(tmp_path):
+    # the fabric-sharding scope extension (DESIGN.md §12): shard_map bodies
+    # are traced code, and distributed/ is a hot dir now
+    files = {"distributed/fab.py": """\
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.experimental.shard_map import shard_map
+
+        def body(x):
+            return np.asarray(jnp.sum(x))
+
+        run = shard_map(body, mesh=None, in_specs=None, out_specs=None)
+        """}
+    findings = run_replint(tmp_path, files, "RPL005")
+    assert len(findings) == 1 and "np.asarray" in findings[0].message
+
+
+def test_rpl005_silent_on_host_side_code_under_distributed(tmp_path):
+    files = {"distributed/fab.py": """\
+        import numpy as np
+
+        def resolve_devices(pipes, devices):
+            return int(np.gcd(pipes, devices))
+        """}
+    assert run_replint(tmp_path, files, "RPL005") == []
+
+
 def test_rpl005_real_hot_paths_are_clean():
     project = load_project(
         [REPO / "src" / "repro" / "switchsim",
-         REPO / "src" / "repro" / "backend"], root=REPO)
+         REPO / "src" / "repro" / "backend",
+         REPO / "src" / "repro" / "distributed"], root=REPO)
     assert analyze(project, [rule_by_id("RPL005")]) == []
 
 
