@@ -24,20 +24,25 @@ as the §7 chain table.
 """
 from __future__ import annotations
 
-import argparse
+import dataclasses
 
 try:
     from benchmarks.artifacts import write_bench_json
+    from benchmarks.common import (check_flags, make_parser, print_rows,
+                                   single_backend)
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
     from artifacts import write_bench_json
+    from common import check_flags, make_parser, print_rows, single_backend
 
 import repro.scenarios as S
 
 PAPER_GAIN_PCT = dict(base=13.0, recirc=28.0)  # §7 reported figures
 
 
-def bench(tiny: bool, skip_oracle: bool = False):
+def bench(tiny: bool, skip_oracle: bool = False, backend: str = None):
     specs = S.family("chain", tiny=tiny)
+    if backend is not None:
+        specs = [dataclasses.replace(s, backend=backend) for s in specs]
     results = {r.spec.name: r for r in S.run_matrix(specs)}
     rows = []
     gains = {}
@@ -82,23 +87,22 @@ def bench(tiny: bool, skip_oracle: bool = False):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: 512 packets, chunk 64, small table")
-    ap.add_argument("--no-verify", action="store_true",
-                    help="skip the engine==loop oracle re-check per run")
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the BENCH json artifact here "
-                         "(benchmarks/artifacts.py schema v2)")
+    # the oracle runs by default here; --oracle is accepted for symmetry
+    # with the benches that default it off (benchmarks/common.py)
+    ap = make_parser(__doc__)
     args = ap.parse_args()
-    rows, summary, matrix = bench(args.tiny, skip_oracle=args.no_verify)
-    print("name,value,derived")
-    for row in rows:
-        name, value, derived = row[0], row[1], row[2]
-        print(f"{name},{value},{str(derived).replace(',', ';')}")
+    check_flags(ap, args)
+    backend = single_backend(ap, args)
+    rows, summary, matrix = bench(args.tiny, skip_oracle=args.no_verify,
+                                  backend=backend)
+    print_rows(rows)
     if args.json:
+        resolved = None
+        if backend is not None:
+            from repro.backend import as_config
+            resolved = as_config(backend).concrete().default
         write_bench_json(args.json, "chain", rows, summary=summary,
-                         matrix=matrix)
+                         matrix=matrix, backend=resolved)
 
 
 if __name__ == "__main__":

@@ -34,12 +34,15 @@ additionally writes the schema-v2 BENCH_hostmodel.json artifact
 """
 from __future__ import annotations
 
-import argparse
+import dataclasses
 
 try:
     from benchmarks.artifacts import write_bench_json
+    from benchmarks.common import (check_flags, make_parser, print_rows,
+                                   single_backend)
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
     from artifacts import write_bench_json
+    from common import check_flags, make_parser, print_rows, single_backend
 
 import repro.scenarios as S
 from repro.hostmodel import HostModel, server_report
@@ -55,14 +58,22 @@ def _check_band(name: str, red_pct: float) -> None:
             f"[{lo}, {hi}]%: {red_pct:.2f}%")
 
 
-def bench_sizes(tiny, host):
+def _family(name, tiny, backend):
+    specs = S.family(name, tiny=tiny)
+    if backend is not None:
+        specs = [dataclasses.replace(s, backend=backend) for s in specs]
+    return specs
+
+
+def bench_sizes(tiny, host, skip_oracle=False, backend=None):
     """Fixed-size + enterprise sweep on one pipe; band + monotonicity."""
-    specs = S.family("hostmodel_sizes", tiny=tiny)
+    specs = _family("hostmodel_sizes", tiny, backend)
     results = S.run_matrix(specs)
     rows = []
     runs = []  # (splittable share, reduction %, workload name)
     for spec, res in zip(specs, results):
-        S.verify_oracle(res)  # engine == loop, counters + telemetry
+        if not skip_oracle:
+            S.verify_oracle(res)  # engine == loop, counters + telemetry
         rep = server_report(host, res.telemetry, res.nf_cycles)
         red_pct = 100.0 * rep["pcie_reduction"]
         cfg = spec.park_config()
@@ -70,14 +81,16 @@ def bench_sizes(tiny, host):
         share = wl.splittable_share(cfg.min_park_len, cfg.park_bytes)
         _check_band(spec.name, red_pct)
         runs.append((share, red_pct, spec.name))
+        # the oracle token appears only when the check actually ran — a
+        # hardcoded one under --no-verify would launder an unchecked run
+        oracle = "" if skip_oracle else ";oracle=identical"
         rows.append((
             f"hostmodel/{spec.name}/pcie_reduction_pct", round(red_pct, 2),
             f"paper=2..58%;splittable_share={share:.3f};"
             f"bus_parked={rep['parked_bus_bytes']};"
             f"bus_base={rep['baseline_bus_bytes']};"
             f"server_pps_gain={rep['server_pps_gain']:.4f};"
-            f"bottleneck={rep['bottleneck_parked']};"
-            f"oracle=identical", spec.name))
+            f"bottleneck={rep['bottleneck_parked']}" + oracle, spec.name))
         rows.append((
             f"hostmodel/{spec.name}/server_pps_parked",
             round(rep["server_pps_parked"]),
@@ -95,9 +108,9 @@ def bench_sizes(tiny, host):
     return rows, {r[2]: round(r[1], 2) for r in runs}, matrix
 
 
-def bench_servers(tiny, host):
+def bench_servers(tiny, host, backend=None):
     """1..8 servers, one pipe each (§6.3.2), enterprise + FW->NAT."""
-    specs = S.family("hostmodel_servers", tiny=tiny)
+    specs = _family("hostmodel_servers", tiny, backend)
     results = S.run_matrix(specs)
     rows = []
     summary = {}
@@ -123,34 +136,36 @@ def bench_servers(tiny, host):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    # the size sweep's oracle runs by default; --oracle is accepted for
+    # symmetry with the benches that default it off (benchmarks/common.py)
+    ap = make_parser(__doc__)
     ap.add_argument("--pcie-gen", type=int, default=3)
     ap.add_argument("--pcie-lanes", type=int, default=8)
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the BENCH json artifact here")
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: 512 packets, chunk 64, 2 sizes, "
-                         "2 server counts")
     args = ap.parse_args()
+    check_flags(ap, args)
+    backend = single_backend(ap, args)
     from repro.hostmodel import PcieLink
     host = HostModel(link=PcieLink(gen=args.pcie_gen, lanes=args.pcie_lanes))
 
-    rows, size_summary, matrix = bench_sizes(args.tiny, host)
-    srv_rows, srv_summary, srv_matrix = bench_servers(args.tiny, host)
+    rows, size_summary, matrix = bench_sizes(
+        args.tiny, host, skip_oracle=args.no_verify, backend=backend)
+    srv_rows, srv_summary, srv_matrix = bench_servers(
+        args.tiny, host, backend=backend)
     rows += srv_rows
     matrix.update(srv_matrix)
 
-    print("name,value,derived")
-    for row in rows:
-        name, value, derived = row[0], row[1], row[2]
-        print(f"{name},{value},{str(derived).replace(',', ';')}")
+    print_rows(rows)
     if args.json:
+        resolved = None
+        if backend is not None:
+            from repro.backend import as_config
+            resolved = as_config(backend).concrete().default
         write_bench_json(args.json, "hostmodel", rows, summary=dict(
             band_pct=list(BAND_PCT),
             pcie_reduction_pct={**size_summary, **srv_summary},
             monotone_in_splittable_share=True,
             pcie=dict(gen=args.pcie_gen, lanes=args.pcie_lanes),
-        ), matrix=matrix)
+        ), matrix=matrix, backend=resolved)
 
 
 if __name__ == "__main__":

@@ -66,7 +66,6 @@ Prints ``name,value,derived`` CSV rows like benchmarks/run.py.
 """
 from __future__ import annotations
 
-import argparse
 import time
 
 import jax
@@ -75,8 +74,10 @@ import numpy as np
 
 try:
     from benchmarks.artifacts import write_bench_json
+    from benchmarks.common import check_flags, make_parser, print_rows
 except ImportError:  # run as a script: benchmarks/ itself is on sys.path
     from artifacts import write_bench_json
+    from common import check_flags, make_parser, print_rows
 
 import repro.scenarios as S
 from repro.core.packet import to_time_major, wire_bytes
@@ -330,7 +331,10 @@ def bench_recirc(n_pkts, chunk, window, pmax, recirc_frac=0.25):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    # shared flags (--tiny/--json/--no-verify/--oracle/--backend) come
+    # from the common parent parser (benchmarks/common.py); this bench is
+    # the one that sweeps multiple --backend values
+    ap = make_parser(__doc__)
     ap.add_argument("--pipes", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--packets", type=int, default=16384)
     ap.add_argument("--chunk", type=int, default=256)
@@ -338,14 +342,6 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=4096)
     ap.add_argument("--pmax", type=int, default=2048)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--backend", nargs="+", default=["ref"],
-                    choices=["ref", "pallas", "pallas_interpret", "auto"],
-                    help="dataplane backend(s) to sweep (repro.backend); "
-                         "more than one records them side by side in the "
-                         "artifact rows")
-    ap.add_argument("--oracle", action="store_true",
-                    help="verify_oracle every sweep point (engine≡loop "
-                         "counters+telemetry on that point's backend)")
     ap.add_argument("--devices", type=int, nargs="+", default=[1],
                     help="fabric scaling sweep (DESIGN.md §12): shard each "
                          "pipes point over these device counts (1 is "
@@ -364,14 +360,9 @@ def main() -> None:
     ap.add_argument("--explicit-drops", action="store_true",
                     help="NF-dropped parked packets send OP=drop "
                          "notifications back to the switch (paper §6.2.4)")
-    ap.add_argument("--no-verify", action="store_true",
-                    help="skip the bit-identical check vs the seed loop")
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the BENCH json artifact here "
-                         "(benchmarks/artifacts.py schema)")
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: 512 packets, chunk 64, small table")
     args = ap.parse_args()
+    check_flags(ap, args)
+    backends = args.backend or ["ref"]
     if args.host_devices:
         # before ANY jax device use — force_host_devices raises if too late
         from repro.distributed import force_host_devices
@@ -385,7 +376,7 @@ def main() -> None:
             ("--repeats", args.repeats, 3),
             ("--no-verify", args.no_verify, False),
             ("--explicit-drops", args.explicit_drops, False),
-            ("--backend", tuple(args.backend), ("ref",)),
+            ("--backend", args.backend, None),
             ("--oracle", args.oracle, False),
             ("--devices", tuple(args.devices), (1,)),
         ) if val != default]
@@ -394,7 +385,7 @@ def main() -> None:
                      f"(the sweep sets capacity per occupancy point and "
                      f"always verifies against the loop oracle)")
     if fabric_sweep:
-        if len(args.backend) > 1:
+        if len(backends) > 1:
             ap.error("--devices sweeps take a single --backend (the "
                      "invariance reference is per (pipes, backend) point)")
         if args.no_verify:
@@ -414,7 +405,7 @@ def main() -> None:
         rows, matrix = bench_fabric(args.pipes, args.devices, args.packets,
                                     args.chunk, args.window, args.capacity,
                                     args.pmax, args.repeats,
-                                    backends=args.backend,
+                                    backends=backends,
                                     oracle=args.oracle,
                                     explicit_drops=args.explicit_drops)
     else:
@@ -422,19 +413,16 @@ def main() -> None:
                              args.window, args.capacity, args.pmax,
                              args.repeats, verify=not args.no_verify,
                              explicit_drops=args.explicit_drops,
-                             backends=args.backend, oracle=args.oracle)
-    print("name,value,derived")
-    for row in rows:
-        name, value, derived = row[0], row[1], row[2]
-        print(f"{name},{value},{str(derived).replace(',', ';')}")
+                             backends=backends, oracle=args.oracle)
+    print_rows(rows)
     if args.json:
         # single-backend runs record their backend as artifact provenance
         # (compare.py uses it to match baselines per backend); resolved to
         # what actually ran, so "auto" can never mask a platform difference
         backend = None
-        if not args.recirc and len(args.backend) == 1:
+        if not args.recirc and len(backends) == 1:
             from repro.backend import as_config
-            backend = as_config(args.backend[0]).concrete().default
+            backend = as_config(backends[0]).concrete().default
         family = ("recirc" if args.recirc
                   else "fabric" if fabric_sweep else "pipeline")
         write_bench_json(args.json, family, rows, matrix=matrix,

@@ -71,6 +71,13 @@ DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
 # (e.g. shard_map silently falling back to per-pipe dispatch) fails.
 TOLERANCES: list[tuple[str, float | None, float]] = [
     (r"^fabric/.*/pps$", 9.0, 0.0),
+    # streaming steady-state pps carries the same wide band as the fabric
+    # rows: runner noise passes, a dispatch/donation collapse (an order of
+    # magnitude) fails.  RSS is absolute-machine-dependent and not gated —
+    # the gated memory verdict is the constant_memory_ok row (catch-all
+    # band: any 0 against a baseline 1 fails).
+    (r"^streaming/.*/pps$", 9.0, 0.0),
+    (r"(/peak_rss_mb$|/rss_growth_mb$)", None, 0.0),
     (r"(/pps$|/wall_s$|/speedup$|_s$)", None, 0.0),
     (r"identical", 0.0, 0.0),
     (r"(gain|saving|reduction|delta|uplift|rate)", 0.08, 0.02),

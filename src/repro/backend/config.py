@@ -18,14 +18,15 @@ scenario runner's ``compile_key`` — two runs with equal configs share a
 compiled program.  ``overrides`` selects a different backend for individual
 primitives (e.g. Pallas payload movement with ref CRC).
 
-``coerce_backend`` is additionally the one deprecation funnel for the
-retired ``use_kernel: bool`` flag (True historically meant "run the Pallas
-kernels in interpret mode", so it maps to ``"pallas_interpret"``).
+``coerce_backend`` normalizes the three accepted spellings (None, a backend
+name, a ``BackendConfig``) into the canonical platform-resolved form every
+dataplane entry point compiles against.  (The boolean kernel-toggle kwarg it
+once funnelled had its deprecation cycle in PR 5 and is gone: passing it
+anywhere is now a ``TypeError``.)
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 # The registry (repro.backend.registry) asserts it implements exactly this
 # set; the names live here so BackendConfig can validate overrides without
@@ -105,18 +106,7 @@ def as_config(backend: "BackendConfig | str | None") -> BackendConfig:
         f"got {type(backend).__name__}")
 
 
-def coerce_backend(backend: "BackendConfig | str | None" = None,
-                   use_kernel: bool | None = None) -> BackendConfig:
-    """Resolve the (backend, deprecated use_kernel) pair every dataplane
-    entry point accepts into one concrete BackendConfig."""
-    if use_kernel is not None:
-        warnings.warn(
-            "use_kernel= is deprecated; pass backend='pallas_interpret' "
-            "(or 'ref' / 'pallas' / a BackendConfig) instead",
-            DeprecationWarning, stacklevel=3)
-        if backend is not None:
-            raise ValueError(
-                "pass either backend= or the deprecated use_kernel=, "
-                "not both")
-        backend = "pallas_interpret" if use_kernel else "ref"
+def coerce_backend(backend: "BackendConfig | str | None" = None) -> BackendConfig:
+    """Validate ``backend`` and resolve it into one concrete BackendConfig
+    (the canonical compile-cache key form; see ``concrete``)."""
     return as_config(backend).concrete()

@@ -9,9 +9,7 @@ the control plane (tagger + metadata table), while the bulk payload movement
 (the paper's stage 3..N striping across MAT-local register arrays, Fig. 4)
 and the per-packet tag CRCs route through the dataplane-backend registry
 (``repro.backend``, DESIGN.md §9): a frozen ``BackendConfig`` selects the
-jnp reference or the Pallas TPU kernels per primitive.  The retired
-``use_kernel: bool`` flag is still accepted as a deprecated alias
-(True -> ``backend="pallas_interpret"``).
+jnp reference or the Pallas TPU kernels per primitive.
 
 Design mapping (see DESIGN.md §2):
   P4 MAT columns holding payload blocks  ->  lane-striped rows of ``ptable``
@@ -186,20 +184,19 @@ def _split_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch):
 
 
 def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-             backend=None,
-             use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
+             backend=None) -> tuple[ParkState, PacketBatch]:
     """Split operation: park payload prefixes, emit header-only packets.
 
     Returns (new_state, packets-as-sent-to-the-NF-server).  Every alive packet
     leaves with a PayloadPark header (ENB=1 if parked, else 0 — §6.1).
 
     ``backend`` selects the payload_store / crc16_tag implementations
-    (``repro.backend``); ``use_kernel`` is the deprecated alias.
+    (``repro.backend``).
 
     This is the un-jitted body, composable inside ``lax.scan`` (the
     multi-pipe engine, DESIGN.md §3); ``split`` is the jitted entry point.
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
     (ti, clk, meta_exp, meta_clk, meta_len), d = _split_control(cfg, state, pkts)
 
     # -- stage 3..N: stripe payload blocks into the payload table -----------
@@ -247,8 +244,7 @@ def split_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     return new_state, out
 
 
-split = partial(jax.jit,
-                static_argnames=("cfg", "backend", "use_kernel"))(split_fn)
+split = partial(jax.jit, static_argnames=("cfg", "backend"))(split_fn)
 
 
 # --------------------------------------------------------------------------
@@ -264,8 +260,7 @@ def _select_rows(mask, a, b):
 
 
 def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-              backend=None,
-              use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
+              backend=None) -> tuple[ParkState, PacketBatch]:
     """One recirculation pass for packets re-injected through the
     recirculation port (paper §6.2.5).  Two cases, handled in order:
 
@@ -285,9 +280,9 @@ def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     budget live in ``switchsim.engine`` (DESIGN.md §6).  The partial-row
     append stays on the plain-JAX path (the Pallas store kernel writes
     whole rows — a recorded deviation, DESIGN.md §9); retry Splits honour
-    ``backend`` (``use_kernel`` is the deprecated alias).
+    ``backend``.
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
     counters = C.bump(state.counters, "recirculations",
                       jnp.sum(pkts.alive & pkts.pp_valid))
 
@@ -334,8 +329,7 @@ def recirc_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     return new_state, _select_rows(retry, retry_out, ext_out)
 
 
-recirc = partial(jax.jit,
-                 static_argnames=("cfg", "backend", "use_kernel"))(recirc_fn)
+recirc = partial(jax.jit, static_argnames=("cfg", "backend"))(recirc_fn)
 
 
 # --------------------------------------------------------------------------
@@ -384,8 +378,7 @@ def _merge_control(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
 
 
 def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
-             backend=None,
-             use_kernel: bool | None = None) -> tuple[ParkState, PacketBatch]:
+             backend=None) -> tuple[ParkState, PacketBatch]:
     """Merge (and Explicit Drop) for packets returning from the NF server.
 
     Outcomes per packet:
@@ -395,12 +388,12 @@ def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
       * CRC or generation mismatch: packet dropped, counted.
 
     ``backend`` selects the payload_fetch / crc16_tag implementations
-    (``repro.backend``); ``use_kernel`` is the deprecated alias.
+    (``repro.backend``).
 
     Un-jitted body for ``lax.scan`` composition (DESIGN.md §3); ``merge`` is
     the jitted entry point.
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
     (meta_exp, meta_clk, meta_len), d = _merge_control(cfg, state, pkts,
                                                        backend=backend)
 
@@ -451,8 +444,7 @@ def merge_fn(cfg: ParkConfig, state: ParkState, pkts: PacketBatch,
     return new_state, out
 
 
-merge = partial(jax.jit,
-                static_argnames=("cfg", "backend", "use_kernel"))(merge_fn)
+merge = partial(jax.jit, static_argnames=("cfg", "backend"))(merge_fn)
 
 
 def stats(state: ParkState) -> dict[str, Any]:

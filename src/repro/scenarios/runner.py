@@ -35,6 +35,7 @@ from repro.scenarios.spec import (ScenarioSpec, build_chain, compile_key,
                                   make_packets, steer)
 from repro.switchsim import engine as E
 from repro.switchsim import faults as F
+from repro.switchsim.results import flat_summary
 from repro.switchsim.simulate import simulate_loop
 from repro.switchsim.telemetry import LinkTelemetry, sum_telemetry
 from repro.core import counters as C
@@ -74,6 +75,13 @@ class ScenarioResult:
         """Offered packets that reached a pipe (steering overflow excluded)."""
         return (sum(self.steer_stats["per_pipe_arrivals"])
                 - self.steer_stats["overflow"])
+
+    def summary(self) -> dict:
+        """The shared flat-dict view (``switchsim.results.flat_summary``)
+        every result type exposes — what bench row-building reads."""
+        return flat_summary(self.counters, self.telemetry,
+                            peak_occupancy=self.peak_occupancy,
+                            nf_counters=self.nf_counters)
 
 
 @dataclasses.dataclass
@@ -256,11 +264,12 @@ def default_rows(result: ScenarioResult, family: str) -> list[tuple]:
     plus the counters that have historically caught regressions.  Curated
     benches format their own richer rows; the nightly matrix driver
     (benchmarks/run.py) emits these."""
-    s, c, t = result.spec, result.counters, result.telemetry
-    derived = (f"wire_bytes={t.wire_bytes};srv_bytes={t.srv_bytes};"
-               f"ret_bytes={t.merged_bytes};splits={c['splits']};"
-               f"merges={c['merges']};premature={c['premature_evictions']};"
-               f"peak_occ={result.peak_occupancy};"
+    s, sm = result.spec, result.summary()
+    derived = (f"wire_bytes={sm['wire_bytes']};srv_bytes={sm['srv_bytes']};"
+               f"ret_bytes={sm['ret_bytes']};splits={sm['splits']};"
+               f"merges={sm['merges']};"
+               f"premature={sm['premature_evictions']};"
+               f"peak_occ={sm['peak_occupancy']};"
                f"overflow={result.steer_stats['overflow']}")
     rows = [
         (f"{family}/{s.name}/goodput_gain",
@@ -271,7 +280,7 @@ def default_rows(result: ScenarioResult, family: str) -> list[tuple]:
     ]
     if s.recirc:
         rows.append((
-            f"{family}/{s.name}/recirculations", c["recirculations"],
-            f"budget_drops={c['recirc_budget_drops']};"
-            f"recirc_bytes={t.recirc_bytes}", s.name))
+            f"{family}/{s.name}/recirculations", sm["recirculations"],
+            f"budget_drops={sm['recirc_budget_drops']};"
+            f"recirc_bytes={sm['tel_recirc_bytes']}", s.name))
     return rows

@@ -11,7 +11,7 @@ check and the request is dropped + counted — the paper's §6.2.4 semantics).
 
 For simplicity the reference engine supports the dense-GQA families (paged
 KV); recurrent-state archs park their fixed-size state as a single page.
-The jnp gather path is the default; ``use_kernel=True`` routes attention
+The jnp gather path is the default; the kernelized variant routes attention
 through the Pallas paged kernel (repro.kernels.paged_attention).
 """
 from __future__ import annotations

@@ -55,79 +55,20 @@ import numpy as np
 from repro.backend import coerce_backend
 from repro.core import counters as C
 from repro.core.packet import PacketBatch, gather_rows
-from repro.core.park import (ParkConfig, ParkState, init_state, merge_fn,
+from repro.core.park import (ParkConfig, init_state, merge_fn,
                              occupancy, recirc_fn, split_fn)
 from repro.nf.chain import Chain, to_explicit_drops
 from repro.switchsim import faults as F
+from repro.switchsim.results import EngineResult, PipesResult
 from repro.switchsim.telemetry import (TEL_FIELDS, LinkTelemetry,
                                        sum_telemetry)
+from repro.traffic import stream as stream_mod
 
-
-@dataclasses.dataclass
-class EngineResult:
-    """Result of one engine run (single pipe unless noted).
-
-    ``merged``: (T, chunk, ...) time-major merged output, arrival order
-    (recirculated packets re-emerge one step late, in the lane rows that
-    lead each chunk).
-    ``sent``:   (T, chunk, ...) NF-bound traffic, or None if not collected.
-    ``state``:  final ParkState (leading pipe axis when multi-pipe).
-    ``wire_bytes``/``srv_bytes``: exact totals, summed host-side in int64.
-    ``srv_bytes`` covers BOTH server-link directions; ``srv_fwd_bytes`` is
-    the switch->server direction alone — the bottleneck direction when the
-    NF chain drops packets (dropped packets never make the return trip).
-    ``ret_bytes`` is the return direction the *merge stage put back on the
-    wire* (chain survivors at full size): the drop-aware baseline's return
-    trip (see ``goodput_gain``).
-    ``peak_occupancy``: max live parked slots observed at any step (max
-    across pipes when multi-pipe).
-    ``telemetry``: exact per-link byte/packet totals (wire in, switch->server,
-    server->switch, recirculation port, merged out — DESIGN.md §7); the byte
-    fields above are derived views kept for compatibility.
-    ``occ_series``: (T+pad,) live parked slots after each step's Merge —
-    the time series the fault-injection recovery gates read (DESIGN.md §10).
-    ``nf_counters``: NF-private counters from the final chain state (e.g.
-    NAT ``nat_stale_hits``), via ``Chain.state_counters``.
-    """
-
-    merged: PacketBatch
-    sent: PacketBatch | None
-    state: ParkState
-    counters: dict
-    srv_bytes: int
-    srv_fwd_bytes: int
-    wire_bytes: int
-    ret_bytes: int
-    peak_occupancy: int
-    telemetry: LinkTelemetry
-    occ_series: np.ndarray = None
-    nf_counters: dict = dataclasses.field(default_factory=dict)
-
-
-@dataclasses.dataclass
-class PipesResult(EngineResult):
-    """Aggregated multi-pipe result; per-pipe breakdowns included.
-
-    ``merged``/``sent`` keep the leading pipe axis: (P, T, chunk, ...).
-    ``counters`` is the cross-pipe sum; ``per_pipe_counters`` the breakdown.
-    """
-
-    per_pipe_counters: list[dict] = dataclasses.field(default_factory=list)
-    per_pipe_srv_bytes: list[int] = dataclasses.field(default_factory=list)
-    per_pipe_wire_bytes: list[int] = dataclasses.field(default_factory=list)
-    # one LinkTelemetry per pipe = per NF server under §6.3.2 steering;
-    # feeds repro.hostmodel's per-server PCIe/DMA accounting (DESIGN.md §7)
-    per_pipe_telemetry: list[LinkTelemetry] = dataclasses.field(
-        default_factory=list)
-    # per-pipe peak parked-slot occupancy; the scenario runner regroups a
-    # flat vmapped pipe axis back into per-scenario results (DESIGN.md §8)
-    # and needs the per-pipe maxima, not only the cross-pipe max
-    per_pipe_peak_occupancy: list[int] = dataclasses.field(
-        default_factory=list)
-    # (P, T+pad) per-pipe occupancy series: server faults hit one pipe, so
-    # the recovery gate needs the victim pipe's series, not the aggregate
-    per_pipe_occ_series: np.ndarray = None
-    per_pipe_nf_counters: list[dict] = dataclasses.field(default_factory=list)
+__all__ = [
+    "EngineResult", "PipesResult", "run_engine", "run_pipes",
+    "goodput_gain", "goodput_gain_from_telemetry", "recirc_slots",
+    "recirc_select", "scan_step", "init_carry",
+]
 
 
 def _alive_bytes(p: PacketBatch) -> jax.Array:
@@ -189,10 +130,35 @@ def _cat_rows(a: PacketBatch, b: PacketBatch) -> PacketBatch:
     return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
 
 
-def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
-                explicit_drops: bool, backend, collect_sent: bool,
-                recirc: int):
-    """Single-pipe scan body: trace (T+pad, chunk, ...) -> ys + final.
+def init_carry(cfg: ParkConfig, chain: Chain, chunk_like: PacketBatch,
+               window: int, recirc: int):
+    """Fresh scan carry (ParkState, NF-chain states, in-flight ring,
+    recirculation lane, step index) for a pipe whose per-step chunks have
+    ``chunk_like``'s (chunk, ...) geometry.  Shared by the materialized
+    scan and the streaming driver — the streaming segment program threads
+    exactly this carry across segments (donated, DESIGN.md §13)."""
+    # All-dead chunks are all-zeros in every field (alive=False == 0),
+    # so a zeros ring is a ring of dead chunks.  With a recirculation
+    # lane the NF-bound chunks are ``recirc`` rows wider.
+    ring = jax.tree.map(
+        lambda a: jnp.zeros(
+            (max(window, 1), a.shape[0] + recirc) + a.shape[1:], a.dtype),
+        chunk_like)
+    lane0 = jax.tree.map(
+        lambda a: jnp.zeros((recirc,) + a.shape[1:], a.dtype),
+        chunk_like) if recirc else ()
+    return (init_state(cfg), chain.init_state(), ring, lane0,
+            jnp.zeros((), jnp.int32))
+
+
+def scan_step(cfg: ParkConfig, chain: Chain, window: int,
+              explicit_drops: bool, backend, collect_sent: bool,
+              recirc: int):
+    """The per-step body both engines scan: carry, (chunk, masks), drain ->
+    carry, telemetry ys.  Factored out of the materialized scan so the
+    streaming segment program (``switchsim.stream``) runs the IDENTICAL
+    step — segment-replay bit-exactness holds by construction, not by
+    parallel maintenance of two bodies.
 
     ``recirc`` is the recirculation-lane width (0 = lane off; the step body
     is then exactly the seed timeline, keeping the bit-exactness oracle).
@@ -203,93 +169,93 @@ def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
     compiled program serves healthy and faulted runs; fault timing is data.
     """
 
+    def step(carry, xs, drain):
+        state, cstates, ring, lane, t = carry
+        cin, s_up, l_up = xs
+        wire_b = _alive_bytes(cin)
+        wire_p = _alive_pkts(cin)
+        if recirc:
+            # Second pass for packets re-injected at the previous step
+            # (their wire bytes were paid on first arrival).
+            state, rout = recirc_fn(cfg, state, lane, backend=backend)
+        state, out = split_fn(cfg, state, cin, backend=backend)
+        if recirc:
+            out, lane, n_denied = recirc_select(cfg, out, recirc)
+            state = dataclasses.replace(
+                state, counters=C.bump(state.counters,
+                                       "recirc_budget_drops", n_denied))
+            # recirculation-port traffic = what enters the lane this step
+            rec_b, rec_p = _alive_bytes(lane), _alive_pkts(lane)
+            nf_in = _cat_rows(rout, out)
+        else:
+            rec_b = rec_p = jnp.zeros((), jnp.int32)
+            nf_in = out
+        # to_server telemetry is tallied on nf_in BEFORE the kill: the
+        # switch still transmits to a dead server (the link is up, the
+        # host is not), so the forward link carries the bytes either way
+        to_srv_p, to_srv_b = _alive_pkts(nf_in), _alive_bytes(nf_in)
+        # Server fault (DESIGN.md §10): packets forwarded while this
+        # pipe's server is down are lost at send time.  The chain still
+        # runs on the step (dead rows are no-ops on NF state — a down
+        # server processes nothing).
+        killed = nf_in.alive & ~s_up
+        state = dataclasses.replace(
+            state, counters=C.bump(state.counters, "fault_drops",
+                                   jnp.sum(killed)))
+        srv_in = nf_in.replace(alive=nf_in.alive & s_up)
+        cstates, nf_out, dropped, _cycles = chain.run(
+            cstates, srv_in, backend=backend, ctx={"lb_up": l_up})
+        if explicit_drops:
+            nf_out = to_explicit_drops(nf_out, dropped)
+        # Drain-vs-drop rule: with drain, the failover agent turns each
+        # killed packet's parked payload into an OP=drop notification on
+        # the return path (the §6.2.4 machinery frees the slot at
+        # Merge); without it the slots leak until expiry-based eviction.
+        nf_out = to_explicit_drops(nf_out, killed & drain)
+        if window == 0:
+            returning = nf_out
+        else:
+            slot = jnp.mod(t, window)
+            returning = jax.tree.map(
+                lambda r: jax.lax.dynamic_index_in_dim(
+                    r, slot, axis=0, keepdims=False), ring)
+            ring = jax.tree.map(
+                lambda r, v: jax.lax.dynamic_update_index_in_dim(
+                    r, v, slot, axis=0), ring, nf_out)
+        state, m = merge_fn(cfg, state, returning, backend=backend)
+        # Per-link telemetry ys, keyed by LinkTelemetry field names
+        # (DESIGN.md §7); summed host-side in int64 by _finalize.
+        ys = dict(
+            merged=m, occ=occupancy(state),
+            wire_pkts=wire_p, wire_bytes=wire_b,
+            to_server_pkts=to_srv_p,
+            to_server_bytes=to_srv_b,
+            from_server_pkts=_alive_pkts(returning),
+            from_server_bytes=_alive_bytes(returning),
+            recirc_pkts=rec_p, recirc_bytes=rec_b,
+            merged_pkts=_alive_pkts(m), merged_bytes=_alive_bytes(m),
+        )
+        if collect_sent:
+            ys["sent"] = nf_in
+        return (state, cstates, ring, lane, t + 1), ys
+
+    return step
+
+
+def _build_scan(cfg: ParkConfig, chain: Chain, window: int,
+                explicit_drops: bool, backend, collect_sent: bool,
+                recirc: int):
+    """Single-pipe scan body: trace (T+pad, chunk, ...) -> ys + final."""
+    step = scan_step(cfg, chain, window, explicit_drops, backend,
+                     collect_sent, recirc)
+
     def run(trace: PacketBatch, server_up: jax.Array, lb_up: jax.Array,
             drain: jax.Array):
-        # All-dead chunks are all-zeros in every field (alive=False == 0),
-        # so a zeros ring is a ring of dead chunks.  With a recirculation
-        # lane the NF-bound chunks are ``recirc`` rows wider.
-        ring = jax.tree.map(
-            lambda a: jnp.zeros(
-                (max(window, 1), a.shape[1] + recirc) + a.shape[2:], a.dtype),
-            trace)
-        lane0 = jax.tree.map(
-            lambda a: jnp.zeros((recirc,) + a.shape[2:], a.dtype),
-            trace) if recirc else ()
-        carry0 = (init_state(cfg), chain.init_state(), ring, lane0,
-                  jnp.zeros((), jnp.int32))
-
-        def step(carry, xs):
-            state, cstates, ring, lane, t = carry
-            cin, s_up, l_up = xs
-            wire_b = _alive_bytes(cin)
-            wire_p = _alive_pkts(cin)
-            if recirc:
-                # Second pass for packets re-injected at the previous step
-                # (their wire bytes were paid on first arrival).
-                state, rout = recirc_fn(cfg, state, lane, backend=backend)
-            state, out = split_fn(cfg, state, cin, backend=backend)
-            if recirc:
-                out, lane, n_denied = recirc_select(cfg, out, recirc)
-                state = dataclasses.replace(
-                    state, counters=C.bump(state.counters,
-                                           "recirc_budget_drops", n_denied))
-                # recirculation-port traffic = what enters the lane this step
-                rec_b, rec_p = _alive_bytes(lane), _alive_pkts(lane)
-                nf_in = _cat_rows(rout, out)
-            else:
-                rec_b = rec_p = jnp.zeros((), jnp.int32)
-                nf_in = out
-            # to_server telemetry is tallied on nf_in BEFORE the kill: the
-            # switch still transmits to a dead server (the link is up, the
-            # host is not), so the forward link carries the bytes either way
-            to_srv_p, to_srv_b = _alive_pkts(nf_in), _alive_bytes(nf_in)
-            # Server fault (DESIGN.md §10): packets forwarded while this
-            # pipe's server is down are lost at send time.  The chain still
-            # runs on the step (dead rows are no-ops on NF state — a down
-            # server processes nothing).
-            killed = nf_in.alive & ~s_up
-            state = dataclasses.replace(
-                state, counters=C.bump(state.counters, "fault_drops",
-                                       jnp.sum(killed)))
-            srv_in = nf_in.replace(alive=nf_in.alive & s_up)
-            cstates, nf_out, dropped, _cycles = chain.run(
-                cstates, srv_in, backend=backend, ctx={"lb_up": l_up})
-            if explicit_drops:
-                nf_out = to_explicit_drops(nf_out, dropped)
-            # Drain-vs-drop rule: with drain, the failover agent turns each
-            # killed packet's parked payload into an OP=drop notification on
-            # the return path (the §6.2.4 machinery frees the slot at
-            # Merge); without it the slots leak until expiry-based eviction.
-            nf_out = to_explicit_drops(nf_out, killed & drain)
-            if window == 0:
-                returning = nf_out
-            else:
-                slot = jnp.mod(t, window)
-                returning = jax.tree.map(
-                    lambda r: jax.lax.dynamic_index_in_dim(
-                        r, slot, axis=0, keepdims=False), ring)
-                ring = jax.tree.map(
-                    lambda r, v: jax.lax.dynamic_update_index_in_dim(
-                        r, v, slot, axis=0), ring, nf_out)
-            state, m = merge_fn(cfg, state, returning, backend=backend)
-            # Per-link telemetry ys, keyed by LinkTelemetry field names
-            # (DESIGN.md §7); summed host-side in int64 by _finalize.
-            ys = dict(
-                merged=m, occ=occupancy(state),
-                wire_pkts=wire_p, wire_bytes=wire_b,
-                to_server_pkts=to_srv_p,
-                to_server_bytes=to_srv_b,
-                from_server_pkts=_alive_pkts(returning),
-                from_server_bytes=_alive_bytes(returning),
-                recirc_pkts=rec_p, recirc_bytes=rec_b,
-                merged_pkts=_alive_pkts(m), merged_bytes=_alive_bytes(m),
-            )
-            if collect_sent:
-                ys["sent"] = nf_in
-            return (state, cstates, ring, lane, t + 1), ys
-
+        chunk_like = jax.tree.map(lambda a: a[0], trace)
+        carry0 = init_carry(cfg, chain, chunk_like, window, recirc)
         (state, cstates, _, _, _), ys = jax.lax.scan(
-            step, carry0, (trace, server_up, lb_up))
+            lambda c, xs: step(c, xs, drain), carry0,
+            (trace, server_up, lb_up))
         return state, cstates, ys
 
     return run
@@ -380,15 +346,20 @@ def _nf_counters(chain: Chain, cstates) -> dict[str, int]:
 def run_engine(
     cfg: ParkConfig,
     chain: Chain,
-    trace: PacketBatch,
+    trace,
     window: int = 1,
     explicit_drops: bool = False,
     backend=None,
-    use_kernel: bool | None = None,
     collect_sent: bool = False,
     faults=None,
 ) -> EngineResult:
-    """Run one pipe over a time-major trace (T, chunk, ...) under one jit.
+    """Run one pipe over a trace source under one jit.
+
+    ``trace`` is a ``traffic.stream.TraceSource`` — or a time-major
+    (T, chunk, ...) ``PacketBatch``, which is the trivial one-shot source
+    (``MaterializedSource``) and is coerced through it.  This entry point
+    materializes the whole source; ``switchsim.stream.run_stream`` is the
+    constant-memory path for sources too long to materialize.
 
     Bit-identical to ``simulate.simulate_loop`` on the same trace (the seed
     Python loop), but the whole timeline is a single compiled program.
@@ -396,12 +367,12 @@ def run_engine(
     recirculation lane drains, and NF-bound chunks gain ``recirc_slots``
     leading lane rows.  ``backend`` selects the hot-path primitive
     implementations (``repro.backend``, DESIGN.md §9) for Split/Merge,
-    header validation and the NF chain alike; ``use_kernel`` is the
-    deprecated alias (True -> "pallas_interpret").  ``faults`` is a
+    header validation and the NF chain alike.  ``faults`` is a
     ``switchsim.faults.FaultSpec`` (or pre-lowered ``FaultArrays``);
     None/NO_FAULT runs healthy through the same compiled program.
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
+    trace = stream_mod.as_source(trace).materialize()
     chunk = jax.tree.leaves(trace)[0].shape[1]
     steps = jax.tree.leaves(trace)[0].shape[0]
     lane = recirc_slots(cfg, chunk)
@@ -425,26 +396,46 @@ def run_engine(
     )
 
 
+def _as_pipe_traces(traces) -> PacketBatch:
+    """Coerce ``run_pipes``'s accepted trace spellings to (P, T, chunk, ...):
+    a pre-stacked PacketBatch passes through; a TraceSource becomes one
+    pipe; a sequence of per-pipe sources is materialized and stacked."""
+    if isinstance(traces, PacketBatch):
+        return traces
+    if isinstance(traces, stream_mod.TraceSource):
+        traces = [traces]
+    if isinstance(traces, (list, tuple)):
+        mats = [stream_mod.as_source(t).materialize() for t in traces]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *mats)
+    raise TypeError(
+        f"traces must be a PacketBatch, a TraceSource or a sequence of "
+        f"TraceSources; got {type(traces).__name__}")
+
+
 def run_pipes(
     cfg: ParkConfig,
     chain: Chain,
-    traces: PacketBatch,
+    traces,
     window: int = 1,
     explicit_drops: bool = False,
     backend=None,
-    use_kernel: bool | None = None,
     collect_sent: bool = False,
     faults=None,
     devices: int = 1,
 ) -> PipesResult:
-    """Run P independent pipes over (P, T, chunk, ...) traces, vmapped.
+    """Run P independent pipes over per-pipe trace sources, vmapped.
+
+    ``traces`` is a sequence of per-pipe ``traffic.stream.TraceSource``s
+    (equal geometry, stacked after materialization), a single source
+    (one pipe), or the pre-stacked (P, T, chunk, ...) ``PacketBatch`` the
+    sources materialize to.
 
     Each pipe owns a fresh ``ParkState`` and NF-chain state (the paper's
     per-port pipes share nothing, §6.3.2); one compiled program drives all
     of them.  Byte totals and counters are aggregated across pipes.
-    ``backend``/``use_kernel``/``faults`` behave exactly as in
-    ``run_engine`` (``FaultArrays`` here may carry per-pipe masks stacked
-    by the scenario runner across batched scenario points).
+    ``backend``/``faults`` behave exactly as in ``run_engine``
+    (``FaultArrays`` here may carry per-pipe masks stacked by the scenario
+    runner across batched scenario points).
 
     ``devices`` > 1 shards the pipe axis over that many devices via
     ``switchsim.fabric`` (mesh axis ``"switch"``, DESIGN.md §12).  Results
@@ -452,7 +443,8 @@ def run_pipes(
     request falls back to 1 with a warning when the pipe count does not
     divide it or fewer devices are visible.
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
+    traces = _as_pipe_traces(traces)
     n_pipes = jax.tree.leaves(traces)[0].shape[0]
     chunk = jax.tree.leaves(traces)[0].shape[2]
     steps = jax.tree.leaves(traces)[0].shape[1]

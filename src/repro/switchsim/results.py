@@ -1,0 +1,200 @@
+"""Unified result dataclasses for every simulation entry point.
+
+``run_engine`` (single pipe), ``run_pipes`` (vmapped pipes), ``simulate``
+/ ``simulate_loop`` (the list-of-chunks oracle view) and the streaming
+driver (``switchsim.stream``) each return a different shape of result, but
+benches and the scenario runner consume the same facts from all of them:
+counters, per-link byte totals, telemetry, peak occupancy and — for the
+streaming driver — the tail-latency block.  ``flat_summary`` is that shared
+view, exposed as a ``summary()`` method on every result type, so artifact
+row-building reads one flat dict instead of hand-picking fields per class.
+
+The dataclasses live here (not in ``engine``/``simulate``) so the streaming
+driver can build on the same base without importing the materialized engine;
+``engine``/``simulate`` re-export them under their historical names.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.packet import PacketBatch
+from repro.core.park import ParkState
+from repro.switchsim.telemetry import LinkTelemetry
+
+__all__ = ["EngineResult", "PipesResult", "SimResult", "StreamResult",
+           "flat_summary"]
+
+
+def flat_summary(counters: dict, telemetry: LinkTelemetry | None, *,
+                 peak_occupancy: int | None = None,
+                 nf_counters: dict | None = None,
+                 latency: dict | None = None) -> dict:
+    """The shared flat-dict view every ``summary()`` returns.
+
+    Keys: the parking counters by name; ``wire_bytes``/``srv_bytes``/
+    ``srv_fwd_bytes``/``ret_bytes`` byte totals; the full per-link
+    telemetry as ``tel_<field>``; ``peak_occupancy`` and the NF-private
+    counters when present; and the streaming tail-latency block
+    (``p50_us``/``p99_us``/``p999_us``/``latency_samples``) when present.
+    """
+    out = {k: int(v) for k, v in counters.items()}
+    if telemetry is not None:
+        out["wire_bytes"] = telemetry.wire_bytes
+        out["srv_bytes"] = telemetry.srv_bytes
+        out["srv_fwd_bytes"] = telemetry.to_server_bytes
+        out["ret_bytes"] = telemetry.merged_bytes
+        out.update({f"tel_{k}": int(v)
+                    for k, v in telemetry.as_dict().items()})
+    if peak_occupancy is not None:
+        out["peak_occupancy"] = int(peak_occupancy)
+    if nf_counters:
+        out.update({k: int(v) for k, v in nf_counters.items()})
+    if latency:
+        out.update({k: latency[k] for k in
+                    ("p50_us", "p99_us", "p999_us") if k in latency})
+        if "samples" in latency:
+            out["latency_samples"] = int(latency["samples"])
+    return out
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Result of one engine run (single pipe unless noted).
+
+    ``merged``: (T, chunk, ...) time-major merged output, arrival order
+    (recirculated packets re-emerge one step late, in the lane rows that
+    lead each chunk).
+    ``sent``:   (T, chunk, ...) NF-bound traffic, or None if not collected.
+    ``state``:  final ParkState (leading pipe axis when multi-pipe).
+    ``wire_bytes``/``srv_bytes``: exact totals, summed host-side in int64.
+    ``srv_bytes`` covers BOTH server-link directions; ``srv_fwd_bytes`` is
+    the switch->server direction alone — the bottleneck direction when the
+    NF chain drops packets (dropped packets never make the return trip).
+    ``ret_bytes`` is the return direction the *merge stage put back on the
+    wire* (chain survivors at full size): the drop-aware baseline's return
+    trip (see ``engine.goodput_gain``).
+    ``peak_occupancy``: max live parked slots observed at any step (max
+    across pipes when multi-pipe).
+    ``telemetry``: exact per-link byte/packet totals (wire in, switch->server,
+    server->switch, recirculation port, merged out — DESIGN.md §7); the byte
+    fields above are derived views kept for compatibility.
+    ``occ_series``: (T+pad,) live parked slots after each step's Merge —
+    the time series the fault-injection recovery gates read (DESIGN.md §10).
+    ``nf_counters``: NF-private counters from the final chain state (e.g.
+    NAT ``nat_stale_hits``), via ``Chain.state_counters``.
+    """
+
+    merged: PacketBatch
+    sent: PacketBatch | None
+    state: ParkState
+    counters: dict
+    srv_bytes: int
+    srv_fwd_bytes: int
+    wire_bytes: int
+    ret_bytes: int
+    peak_occupancy: int
+    telemetry: LinkTelemetry
+    occ_series: np.ndarray = None
+    nf_counters: dict = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> dict:
+        return flat_summary(self.counters, self.telemetry,
+                            peak_occupancy=self.peak_occupancy,
+                            nf_counters=self.nf_counters)
+
+
+@dataclasses.dataclass
+class PipesResult(EngineResult):
+    """Aggregated multi-pipe result; per-pipe breakdowns included.
+
+    ``merged``/``sent`` keep the leading pipe axis: (P, T, chunk, ...).
+    ``counters`` is the cross-pipe sum; ``per_pipe_counters`` the breakdown.
+    """
+
+    per_pipe_counters: list[dict] = dataclasses.field(default_factory=list)
+    per_pipe_srv_bytes: list[int] = dataclasses.field(default_factory=list)
+    per_pipe_wire_bytes: list[int] = dataclasses.field(default_factory=list)
+    # one LinkTelemetry per pipe = per NF server under §6.3.2 steering;
+    # feeds repro.hostmodel's per-server PCIe/DMA accounting (DESIGN.md §7)
+    per_pipe_telemetry: list[LinkTelemetry] = dataclasses.field(
+        default_factory=list)
+    # per-pipe peak parked-slot occupancy; the scenario runner regroups a
+    # flat vmapped pipe axis back into per-scenario results (DESIGN.md §8)
+    # and needs the per-pipe maxima, not only the cross-pipe max
+    per_pipe_peak_occupancy: list[int] = dataclasses.field(
+        default_factory=list)
+    # (P, T+pad) per-pipe occupancy series: server faults hit one pipe, so
+    # the recovery gate needs the victim pipe's series, not the aggregate
+    per_pipe_occ_series: np.ndarray = None
+    per_pipe_nf_counters: list[dict] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SimResult:
+    """The seed list-of-chunks view (``simulate`` / ``simulate_loop``)."""
+
+    merged: list            # list[PacketBatch] in arrival order
+    state: ParkState
+    sent_to_server: list    # list[PacketBatch] (post-split, pre-NF)
+    counters: dict
+    srv_bytes: int          # total bytes switch->server (goodput accounting)
+    wire_bytes: int         # total bytes generator->switch
+    ret_bytes: int          # bytes the merge stage put back on the wire
+    telemetry: LinkTelemetry  # exact per-link byte/packet totals (DESIGN.md §7)
+    # NF-private counters from the final chain state (Chain.state_counters,
+    # e.g. NAT nat_stale_hits) — part of the engine≡loop oracle contract
+    nf_counters: dict = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> dict:
+        return flat_summary(self.counters, self.telemetry,
+                            nf_counters=self.nf_counters)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Result of a streaming run (``switchsim.stream.run_stream``).
+
+    Constant-memory by construction: no merged/sent traffic is retained —
+    what survives is the final switch state, exact counters/telemetry
+    (bit-identical to the materialized engine over the same steps, the
+    segment-replay oracle's contract), the reservoir-sampled sojourn-time
+    distribution (``latency``: p50/p99/p999 in µs plus sample counts) and
+    per-segment occupancy summaries (``occ_segments``: one dict per segment
+    with ``start``/``steps``/``min``/``mean``/``max``/``last``) standing in
+    for the full occupancy series a materialized run would keep.
+    """
+
+    state: ParkState
+    counters: dict
+    telemetry: LinkTelemetry
+    nf_counters: dict
+    peak_occupancy: int
+    latency: dict
+    occ_segments: list[dict]
+    steps: int
+    segments: int
+    segment_len: int
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.telemetry.wire_bytes
+
+    @property
+    def srv_bytes(self) -> int:
+        return self.telemetry.srv_bytes
+
+    @property
+    def srv_fwd_bytes(self) -> int:
+        return self.telemetry.to_server_bytes
+
+    @property
+    def ret_bytes(self) -> int:
+        return self.telemetry.merged_bytes
+
+    def summary(self) -> dict:
+        return flat_summary(self.counters, self.telemetry,
+                            peak_occupancy=self.peak_occupancy,
+                            nf_counters=self.nf_counters,
+                            latency=self.latency)

@@ -35,27 +35,15 @@ import numpy as np
 from repro.backend import coerce_backend
 from repro.core import counters as C
 from repro.core.packet import PacketBatch, dead_batch, to_time_major
-from repro.core.park import (ParkConfig, ParkState, init_state, merge, recirc,
-                             split)
+from repro.core.park import ParkConfig, init_state, merge, recirc, split
 from repro.nf.chain import Chain, to_explicit_drops
 from repro.switchsim import engine as engine_mod
 from repro.switchsim import faults as F
+from repro.switchsim.results import SimResult
 from repro.switchsim.telemetry import TEL_FIELDS, LinkTelemetry
 
+__all__ = ["SimResult", "simulate", "simulate_loop", "baseline_roundtrip"]
 
-@dataclasses.dataclass
-class SimResult:
-    merged: list            # list[PacketBatch] in arrival order
-    state: ParkState
-    sent_to_server: list    # list[PacketBatch] (post-split, pre-NF)
-    counters: dict
-    srv_bytes: int          # total bytes switch->server (goodput accounting)
-    wire_bytes: int         # total bytes generator->switch
-    ret_bytes: int          # bytes the merge stage put back on the wire
-    telemetry: LinkTelemetry  # exact per-link byte/packet totals (DESIGN.md §7)
-    # NF-private counters from the final chain state (Chain.state_counters,
-    # e.g. NAT nat_stale_hits) — part of the engine≡loop oracle contract
-    nf_counters: dict = dataclasses.field(default_factory=dict)
 
 def _chunks(pkts: PacketBatch, chunk: int):
     n = pkts.batch_size
@@ -83,7 +71,6 @@ def simulate(
     chunk: int = 256,
     explicit_drops: bool = False,
     backend=None,
-    use_kernel: bool | None = None,
     faults=None,
 ) -> SimResult:
     """Stream ``pkts`` through split -> NF chain -> merge with ``window``
@@ -92,11 +79,10 @@ def simulate(
     Compatibility wrapper: delegates to the scanned engine (one compiled
     program, on-device accounting) and re-materializes the list-of-chunks
     view the seed API exposed.  ``backend`` selects the hot-path primitive
-    implementations (``repro.backend``); ``use_kernel`` is the deprecated
-    alias (True -> "pallas_interpret"); ``faults`` a ``faults.FaultSpec``
+    implementations (``repro.backend``); ``faults`` a ``faults.FaultSpec``
     fault event (DESIGN.md §10).
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
     trace = to_time_major(pkts, chunk)
     res = engine_mod.run_engine(
         cfg, chain, trace, window=window, explicit_drops=explicit_drops,
@@ -125,7 +111,6 @@ def simulate_loop(
     chunk: int = 256,
     explicit_drops: bool = False,
     backend=None,
-    use_kernel: bool | None = None,
     faults=None,
     fault_pipe: int = 0,
 ) -> SimResult:
@@ -145,7 +130,7 @@ def simulate_loop(
     this single-pipe loop replays (a ``server`` fault only hits its victim
     pipe's masks).
     """
-    backend = coerce_backend(backend, use_kernel)
+    backend = coerce_backend(backend)
     if engine_mod.recirc_slots(cfg, chunk) > 0:
         return _simulate_loop_recirc(cfg, chain, pkts, window, chunk,
                                      explicit_drops, backend, faults,

@@ -1,0 +1,254 @@
+"""Chunked trace sources for the streaming engine (DESIGN.md §13).
+
+The materialized path caps a run at what fits in host memory: ``make_packets``
+builds the whole trace up front and ``run_engine`` scans it in one program.
+A ``TraceSource`` inverts that — it is a *recipe* for a fixed-geometry
+time-major trace, able to produce any step range ``[start, start+count)`` on
+demand, so the streaming driver (``switchsim.stream``) can feed hours of
+simulated traffic through a donated-carry segment without ever holding more
+than one segment of packets live.
+
+Two sources:
+
+  * ``MaterializedSource`` — wraps an existing (T, chunk, ...) trace; the
+    trivial one-shot source the array-based entry points coerce through
+    (``as_source``), which is what makes sources THE trace API rather than
+    a fourth parallel one.
+  * ``SyntheticSource`` — generates chunk ``t`` as a pure function of
+    ``(seed, t)`` (``jax.random.fold_in`` per step), so any segment is
+    independently regenerable: constant memory, trivially replayable for
+    the segment-replay oracle, and identical whether materialized up front
+    or streamed.  Flow identity comes from a ``FlowPool`` — a splitmix32
+    hash of the flow index, no per-flow state — sized for millions of
+    concurrent flows (the materialized ``generator.flow_pool`` allocates
+    and uniqueness-checks arrays, which stops scaling around 1e5).
+    ``DiurnalLoad`` modulates the offered load per step (packets beyond
+    the per-step offered count are dead rows), giving long runs the
+    time-of-day shape steady-state tail latency is sensitive to.
+
+Determinism contract: ``source.segment(s, n)`` depends only on the source's
+own fields — never on what was generated before — so streaming a prefix and
+materializing the same prefix are bit-identical by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packet import PacketBatch, to_time_major
+from repro.traffic.generator import Workload, enterprise
+
+__all__ = [
+    "TraceSource", "MaterializedSource", "SyntheticSource", "FlowPool",
+    "DiurnalLoad", "as_source", "splitmix32",
+]
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    """Counter-based splitmix mix (32-bit variant): uint32 -> uint32.
+
+    Stateless — hashing a counter IS the RNG stream — which is what lets
+    flow identity and reservoir decisions be pure functions of an index
+    (no generator state in any carry)."""
+    z = (x.astype(jnp.uint32) + jnp.uint32(0x9E3779B9))
+    z = (z ^ (z >> 16)) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    return z ^ (z >> 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowPool:
+    """``n_flows`` deterministic (src_ip, src_port) identities, computed on
+    the fly from the flow index — no materialized arrays, so the pool can
+    be sized for millions of concurrent flows.  Distinct indices may collide
+    on IP with probability ~n^2/2^32 (birthday bound; ~0.01 % at 1e3 flows,
+    still under 12 % at 1e5) — collisions merely merge two flows' NF state,
+    they never corrupt parking."""
+
+    n_flows: int
+    seed: int = 7
+
+    def __post_init__(self):
+        if self.n_flows < 1:
+            raise ValueError(f"n_flows must be >= 1, got {self.n_flows}")
+
+    def identity(self, flow: jax.Array) -> tuple[jax.Array, jax.Array]:
+        h = splitmix32(flow.astype(jnp.uint32) ^
+                       splitmix32(jnp.uint32(self.seed)))
+        h2 = splitmix32(h)
+        ip = (h.astype(jnp.int32) & jnp.int32(0x7FFFFFFF)) | jnp.int32(1)
+        port = jnp.int32(1024) + (h2.astype(jnp.int32) & jnp.int32(0x7FFF))
+        return ip, port
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalLoad:
+    """Time-varying offered load: ``load(t)`` in [floor, 1] follows one
+    sinusoidal "day" of ``period`` steps.  Per step, the first
+    ``round(load * chunk)`` rows of the generated chunk are offered; the
+    rest are dead (zeroed) rows — geometry stays fixed, only the alive
+    prefix breathes.  A pure function of ``t``: replaying a segment
+    reproduces its load exactly."""
+
+    period: int = 4096
+    base: float = 0.75
+    amplitude: float = 0.25
+    phase: float = 0.0
+
+    def __post_init__(self):
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period}")
+        if not 0.0 <= self.base - self.amplitude:
+            raise ValueError("load floor (base - amplitude) must be >= 0")
+        if self.base + self.amplitude > 1.0 + 1e-9:
+            raise ValueError("load peak (base + amplitude) must be <= 1")
+
+    def load(self, t: jax.Array) -> jax.Array:
+        ang = 2.0 * jnp.pi * (t.astype(jnp.float32) / self.period) + self.phase
+        return self.base + self.amplitude * jnp.sin(ang)
+
+    def offered(self, t: jax.Array, chunk: int) -> jax.Array:
+        return jnp.round(self.load(t) * chunk).astype(jnp.int32)
+
+
+class TraceSource:
+    """A deterministic recipe for a fixed-geometry time-major trace.
+
+    Contract (DESIGN.md §13): ``chunk``/``pmax`` fix the per-step geometry,
+    ``steps`` its length; ``segment(start, count)`` returns the
+    (count, chunk, ...) PacketBatch for steps ``[start, start+count)`` and
+    must be a pure function of the source's fields — independent of call
+    history — so any prefix can be replayed bit-identically."""
+
+    chunk: int
+    pmax: int
+    steps: int
+
+    @property
+    def packets(self) -> int:
+        return self.steps * self.chunk
+
+    def segment(self, start: int, count: int) -> PacketBatch:
+        raise NotImplementedError
+
+    def __iter__(self) -> Iterator[PacketBatch]:
+        for t in range(self.steps):
+            yield self.segment(t, 1)
+
+    def materialize(self, steps: int | None = None) -> PacketBatch:
+        """The one-shot view: the (steps, chunk, ...) time-major trace the
+        materialized engine scans.  Streaming this source and scanning the
+        materialization are bit-identical (the replay oracle's invariant)."""
+        n = self.steps if steps is None else steps
+        if not 0 <= n <= self.steps:
+            raise ValueError(f"steps {n} outside [0, {self.steps}]")
+        return self.segment(0, n)
+
+
+@dataclasses.dataclass
+class MaterializedSource(TraceSource):
+    """The trivial source: an already-built (T, chunk, ...) trace."""
+
+    trace: PacketBatch
+
+    def __post_init__(self):
+        leaf = jax.tree.leaves(self.trace)[0]
+        self.steps = int(leaf.shape[0])
+        self.chunk = int(leaf.shape[1])
+        self.pmax = int(self.trace.pmax)
+
+    def segment(self, start: int, count: int) -> PacketBatch:
+        if not 0 <= start <= start + count <= self.steps:
+            raise ValueError(
+                f"segment [{start}, {start + count}) outside "
+                f"[0, {self.steps})")
+        return jax.tree.map(lambda a: a[start:start + count], self.trace)
+
+    @classmethod
+    def from_flat(cls, pkts: PacketBatch, chunk: int) -> "MaterializedSource":
+        return cls(to_time_major(pkts, chunk))
+
+
+@dataclasses.dataclass
+class SyntheticSource(TraceSource):
+    """Streaming workload generator: chunk ``t`` = f(seed, t).
+
+    Each step folds ``t`` into the base key and draws a fresh ``workload``
+    chunk; ``flows`` (a FlowPool or a flow count) rewrites source identity
+    from the splitmix pool; ``load`` (optional DiurnalLoad) limits the
+    alive prefix and zeroes the dead tail so offered traffic is canonical.
+    The per-count segment builder is jitted once per segment length."""
+
+    steps: int
+    chunk: int = 256
+    pmax: int = 2048
+    seed: int = 0
+    workload: Workload = None
+    flows: "FlowPool | int | None" = None
+    load: DiurnalLoad | None = None
+
+    def __post_init__(self):
+        if self.steps < 0:
+            raise ValueError(f"steps must be >= 0, got {self.steps}")
+        if self.workload is None:
+            self.workload = enterprise()
+        if isinstance(self.flows, int):
+            self.flows = FlowPool(self.flows, seed=self.seed + 7)
+        self._jit_segment = jax.jit(self._segment, static_argnames="count")
+
+    def _one_step(self, t: jax.Array) -> PacketBatch:
+        key = jax.random.fold_in(jax.random.key(self.seed), t)
+        pkts = self.workload.make_batch(key, self.chunk, pmax=self.pmax)
+        if self.flows is not None:
+            kf = jax.random.fold_in(key, 0xF10)
+            idx = jax.random.randint(kf, (self.chunk,), 0,
+                                     self.flows.n_flows, dtype=jnp.int32)
+            ip, port = self.flows.identity(idx)
+            pkts = pkts.replace(src_ip=ip, src_port=port)
+        if self.load is not None:
+            alive = jnp.arange(self.chunk) < self.load.offered(t, self.chunk)
+            # zero the dead tail entirely (dead rows are all-zero by
+            # convention — see engine ring seeding) so the offered trace
+            # is canonical, not just masked
+            pkts = jax.tree.map(
+                lambda a: jnp.where(
+                    alive.reshape((-1,) + (1,) * (a.ndim - 1)), a,
+                    jnp.zeros_like(a)), pkts)
+        return pkts
+
+    def _segment(self, start, count: int) -> PacketBatch:
+        ts = start + jnp.arange(count, dtype=jnp.int32)
+        return jax.vmap(self._one_step)(ts)
+
+    def segment(self, start: int, count: int) -> PacketBatch:
+        if not 0 <= start <= start + count <= self.steps:
+            raise ValueError(
+                f"segment [{start}, {start + count}) outside "
+                f"[0, {self.steps})")
+        return self._jit_segment(jnp.int32(start), count)
+
+
+def as_source(trace, chunk: int | None = None) -> TraceSource:
+    """Coerce the trace spellings every engine entry point accepts:
+    a TraceSource passes through; a time-major (T, chunk, ...) PacketBatch
+    becomes a MaterializedSource; a flat (B, ...) batch needs ``chunk``."""
+    if isinstance(trace, TraceSource):
+        return trace
+    if isinstance(trace, PacketBatch):
+        if trace.src_ip.ndim == 2:
+            return MaterializedSource(trace)
+        if trace.src_ip.ndim == 1:
+            if chunk is None:
+                raise ValueError(
+                    "flat packet batch needs an explicit chunk size")
+            return MaterializedSource.from_flat(trace, chunk)
+        raise ValueError(
+            f"expected a flat batch or a time-major trace, got a "
+            f"{trace.src_ip.ndim}-dim PacketBatch")
+    raise TypeError(
+        f"trace must be a TraceSource or PacketBatch, got "
+        f"{type(trace).__name__}")

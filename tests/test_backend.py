@@ -4,9 +4,9 @@ Covers the registry contract (one ref + one Pallas impl per primitive),
 BackendConfig resolution, cross-layer parity (ref ≡ pallas_interpret
 bit-exact per primitive AND through the full engine), golden vectors
 captured from the pre-refactor jnp math (Firewall / MaglevLB / tag CRC must
-be unchanged), the deprecated ``use_kernel`` alias, and the scenario
-runner's ``backend`` grid axis with the engine≡loop oracle in both
-recirculation modes.
+be unchanged), the removal of the retired ``use_kernel`` kwarg (now a
+``TypeError`` everywhere), and the scenario runner's ``backend`` grid axis
+with the engine≡loop oracle in both recirculation modes.
 """
 import jax
 import jax.numpy as jnp
@@ -70,17 +70,16 @@ class TestBackendConfig:
         with pytest.raises(TypeError, match="backend must be"):
             as_config(42)
 
-    def test_coerce_use_kernel_mapping_warns(self):
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            assert coerce_backend(use_kernel=True) == \
-                BackendConfig("pallas_interpret")
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            assert coerce_backend(use_kernel=False) == BackendConfig("ref")
+    def test_coerce_is_pure_backend_validation(self):
+        assert coerce_backend() == BackendConfig().concrete()
+        assert coerce_backend("ref") == BackendConfig("ref")
+        assert coerce_backend("auto") == coerce_backend(None)
+        with pytest.raises(ValueError, match="unknown backend"):
+            coerce_backend("cuda")
 
-    def test_coerce_rejects_both_spellings(self):
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="not both"):
-                coerce_backend(backend="ref", use_kernel=True)
+    def test_coerce_rejects_retired_use_kernel(self):
+        with pytest.raises(TypeError):
+            coerce_backend(use_kernel=True)
 
     def test_registry_matches_the_declared_primitive_set(self):
         assert set(PRIMITIVES) == {"crc16_tag", "acl_match", "maglev_select",
@@ -202,50 +201,49 @@ class TestGoldenVectors:
 CFG = ParkConfig(capacity=64, max_exp=2, pmax=1024)
 
 
-class TestDeprecatedUseKernel:
-    def test_split_merge_recirc_accept_use_kernel(self):
+class TestRetiredUseKernel:
+    """The ``use_kernel`` kwarg got its one deprecation cycle in PR 5 and
+    is now gone end-to-end: every former acceptor raises ``TypeError``."""
+
+    def test_split_merge_recirc_reject_use_kernel(self):
         st0 = init_state(CFG)
         pkts = make_udp_batch(jax.random.key(3), 16, 400, pmax=1024)
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            st_a, sent_a = split_fn(CFG, st0, pkts, use_kernel=True)
-        st_b, sent_b = split_fn(CFG, st0, pkts, backend="pallas_interpret")
-        assert jnp.all(st_a.ptable == st_b.ptable)
-        assert jnp.all(sent_a.pp_crc == sent_b.pp_crc)
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            _, out_a = merge_fn(CFG, st_a, sent_a, use_kernel=True)
-        _, out_b = merge_fn(CFG, st_b, sent_b, backend="pallas_interpret")
-        assert jnp.all(out_a.payload == out_b.payload)
+        with pytest.raises(TypeError, match="use_kernel"):
+            split_fn(CFG, st0, pkts, use_kernel=True)
+        st, sent = split_fn(CFG, st0, pkts, backend="pallas_interpret")
+        with pytest.raises(TypeError, match="use_kernel"):
+            merge_fn(CFG, st, sent, use_kernel=True)
         rc = ParkConfig(capacity=64, max_exp=2, pmax=1024,
                         recirculation=True)
         st_r, sent_r = split_fn(rc, init_state(rc), pkts)
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
+        with pytest.raises(TypeError, match="use_kernel"):
             recirc_fn(rc, st_r, sent_r, use_kernel=False)
 
-    def test_simulate_and_run_pipes_accept_use_kernel(self):
+    def test_simulate_and_engine_reject_use_kernel(self):
         pkts = make_udp_batch(jax.random.key(5), 64, 300, pmax=512)
         cfg = ParkConfig(capacity=64, max_exp=2, pmax=512)
         chain = Chain((Nat(),))
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            old = simulate(cfg, chain, pkts, window=1, chunk=32,
-                           use_kernel=True)
-        new = simulate(cfg, chain, pkts, window=1, chunk=32,
-                       backend="pallas_interpret")
-        assert old.counters == new.counters
-        assert old.telemetry == new.telemetry
-        traces = jax.tree.map(lambda a: a[None],
-                              to_time_major(pkts, 32))
-        with pytest.warns(DeprecationWarning, match="use_kernel"):
-            oldp = E.run_pipes(cfg, chain, traces, window=1,
-                               use_kernel=False)
-        newp = E.run_pipes(cfg, chain, traces, window=1, backend="ref")
-        assert oldp.counters == newp.counters
-
-    def test_backend_and_use_kernel_together_rejected(self):
-        pkts = make_udp_batch(jax.random.key(5), 8, 300, pmax=512)
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="not both"):
-                split_fn(CFG, init_state(CFG), pkts, backend="ref",
+        with pytest.raises(TypeError, match="use_kernel"):
+            simulate(cfg, chain, pkts, window=1, chunk=32, use_kernel=True)
+        with pytest.raises(TypeError, match="use_kernel"):
+            simulate_loop(cfg, chain, pkts, window=1, chunk=32,
+                          use_kernel=False)
+        traces = jax.tree.map(lambda a: a[None], to_time_major(pkts, 32))
+        with pytest.raises(TypeError, match="use_kernel"):
+            E.run_pipes(cfg, chain, traces, window=1, use_kernel=False)
+        with pytest.raises(TypeError, match="use_kernel"):
+            E.run_engine(cfg, chain, to_time_major(pkts, 32), window=1,
                          use_kernel=True)
+
+    def test_backend_spelling_still_works_everywhere(self):
+        pkts = make_udp_batch(jax.random.key(5), 64, 300, pmax=512)
+        cfg = ParkConfig(capacity=64, max_exp=2, pmax=512)
+        chain = Chain((Nat(),))
+        a = simulate(cfg, chain, pkts, window=1, chunk=32,
+                     backend="pallas_interpret")
+        b = simulate(cfg, chain, pkts, window=1, chunk=32, backend="ref")
+        assert a.counters == b.counters
+        assert a.telemetry == b.telemetry
 
 
 class TestEngineBackends:

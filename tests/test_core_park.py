@@ -216,8 +216,8 @@ def test_property_unique_live_tags(seed):
 
 
 def test_backend_paths_match():
-    """ref vs pallas_interpret through split/merge (the deprecated
-    use_kernel alias is covered by tests/test_backend.py)."""
+    """ref vs pallas_interpret through split/merge (the retired kernel
+    toggle's TypeError contract is covered by tests/test_backend.py)."""
     st0 = init_state(CFG)
     pkts = mk(3, 16, 400)
     st_a, sent_a = split(CFG, st0, pkts, backend="ref")
